@@ -1,0 +1,24 @@
+use damov::sim::{simulate, CoreModel, SystemConfig};
+use damov::workloads::{registry, Scale};
+
+fn main() {
+    let code = std::env::args().nth(1).unwrap_or("PLYgemver".into());
+    let cores: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let f = registry::by_code(&code).expect("unknown code");
+    let t = f.trace(cores, Scale(1.0));
+    let total: usize = t.iter().map(Vec::len).sum();
+    println!("{} cores={} accesses={}", code, cores, total);
+    for cfg in [
+        SystemConfig::host(cores, CoreModel::OutOfOrder),
+        SystemConfig::host_prefetch(cores, CoreModel::OutOfOrder),
+        SystemConfig::ndp(cores, CoreModel::OutOfOrder),
+    ] {
+        let r = simulate(&cfg, &t);
+        println!(
+            "{:8} perf={:9.1} ipc={:5.2} mb={:.2} mpki={:6.2} lfmr={:.3} ai={:5.1} amat={:6.1} parts={:?} fracs={:?} rho={:.2} dlat={:6.1} bw={:.1}GB/s",
+            r.kind.label(), r.perf(), r.ipc, r.memory_bound, r.mpki, r.lfmr, r.ai, r.amat,
+            r.amat_parts.map(|x| x.round()), r.level_fracs.map(|x| (x*100.0).round()),
+            r.dram_rho, r.dram_loaded_lat, r.bw_bytes_s/1e9,
+        );
+    }
+}

@@ -1,0 +1,83 @@
+"""AOT lowering: jax/Pallas (Layers 1-2) -> HLO *text* artifacts for the
+Rust PJRT runtime (Layer 3).
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+Produces:
+  artifacts/locality.hlo.txt   — locality_chunk
+  artifacts/kmeans.hlo.txt     — kmeans_iteration
+  artifacts/manifest.json      — shapes/dtypes for the Rust loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias (ignored)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {}
+
+    lowered = jax.jit(model.locality_chunk).lower(*model.locality_example_args())
+    path = os.path.join(args.out_dir, "locality.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["locality"] = {
+        "file": "locality.hlo.txt",
+        "chunk_windows": model.CHUNK_WINDOWS,
+        "window": model.WINDOW,
+        "inputs": ["f64[CHUNK,32] windows", "f64[CHUNK] mask"],
+        "outputs": ["f64 spatial_sum", "f64 temporal_sum", "f64 n_valid"],
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    lowered = jax.jit(model.kmeans_iteration).lower(*model.kmeans_example_args())
+    path = os.path.join(args.out_dir, "kmeans.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["kmeans"] = {
+        "file": "kmeans.hlo.txt",
+        "points": model.KM_POINTS,
+        "centroids": model.KM_CENTROIDS,
+        "features": model.KM_FEATURES,
+        "inputs": ["f32[N,F] points", "f32[K,F] centroids", "f32[N] mask"],
+        "outputs": ["i32[N] assign", "f32[K,F] centroids"],
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest, "w") as f:
+        json.dump(artifacts, f, indent=2)
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: k-means assignment step.
+
+Used by Step-2 clustering (Fig 3) and the §4.1 hierarchical-clustering
+cross-check: assign each function's feature vector to its nearest
+centroid (squared L2). The (N, K) distance matrix is built as a single
+broadcast block — N=64 padded points x K=8 padded centroids x F=8
+features is tiny (VMEM-trivial); the kernel exists to keep the entire
+Step-2 analytics pipeline in one AOT artifact rather than for FLOPs.
+
+``interpret=True``: see locality.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Padded artifact shapes (see aot.py / runtime::analytics).
+N_POINTS = 64
+N_CENTROIDS = 8
+N_FEATURES = 8
+
+
+def _assign_kernel(pts_ref, cent_ref, out_ref):
+    p = pts_ref[...]  # (N, F)
+    c = cent_ref[...]  # (K, F)
+    d2 = ((p[:, None, :] - c[None, :, :]) ** 2).sum(axis=-1)  # (N, K)
+    out_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment via Pallas.
+
+    Args:
+      points: (N, F) float32.
+      centroids: (K, F) float32.
+
+    Returns:
+      (N,) int32.
+    """
+    n, f = points.shape
+    k = centroids.shape[0]
+    return pl.pallas_call(
+        _assign_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(points, centroids)
+
+
+def kmeans_step(points, centroids, mask):
+    """One Lloyd iteration: Pallas assignment + jnp masked update (L2)."""
+    assign = kmeans_assign(points, centroids)
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    onehot = onehot * mask[:, None]
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ points
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+    return assign, new

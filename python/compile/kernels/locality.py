@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: windowed spatial/temporal locality (Eqs. 1-2).
+
+The trace analytics hot-spot of Step 2: for every non-overlapping window
+of W=32 word addresses, compute
+
+* the spatial contribution ``1 / min_nonzero_pairwise_distance`` and
+* the temporal contribution ``sum_i [k_i>=2] * 2^floor(log2 k_i) / k_i``
+  (``k_i`` = occurrences of the address at position i in the window),
+
+then reduce over the window tile. The O(W^2) pairwise compare is
+expressed as a broadcast (TILE, 32, 32) abs-diff/equality block — pure
+VPU work with no gather/scatter (see DESIGN.md §Hardware-Adaptation).
+
+BlockSpec moves TILE=256 windows (256 x 32 x 8 B = 64 KiB) HBM->VMEM per
+grid step, comfortably inside VMEM even with the (256,32,32) f32
+intermediate (8 MiB is the budget; the intermediate is built in two
+halves of 4 MiB by the compiler's fusion, and at f64 input precision the
+diff tensor is materialized once). ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU numbers are
+estimated analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+WINDOW = 32
+
+
+def pow2_floor(k):
+    """Largest power of two <= k, exact for k in [1, 32].
+
+    XLA's log2 lowering is not exact at powers of two (log2(8) can
+    return 2.9999999999999996), so floor(log2(k)) silently drops a bin;
+    a compare/select chain avoids the transcendental entirely.
+    """
+    return jnp.where(
+        k >= 32.0,
+        32.0,
+        jnp.where(
+            k >= 16.0,
+            16.0,
+            jnp.where(k >= 8.0, 8.0, jnp.where(k >= 4.0, 4.0, jnp.where(k >= 2.0, 2.0, 1.0))),
+        ),
+    )
+
+
+TILE = 256  # windows per grid step
+
+
+def _locality_kernel(win_ref, mask_ref, spat_ref, temp_ref):
+    """Per-tile kernel: windows (TILE, 32) f64 -> per-window sums."""
+    a = win_ref[...]  # (TILE, 32) f64
+    m = mask_ref[...]  # (TILE,) f64
+    d = jnp.abs(a[:, :, None] - a[:, None, :])  # (TILE, 32, 32)
+    big = jnp.float64(2 ** 62)
+    dm = jnp.where(d == 0.0, big, d)
+    min_stride = dm.min(axis=(1, 2))
+    spatial = jnp.where(min_stride >= big, 0.0, 1.0 / min_stride) * m
+    eq = (d == 0.0).astype(jnp.float64)
+    k = eq.sum(axis=2)  # (TILE, 32)
+    contrib = jnp.where(k >= 2.0, pow2_floor(k) / k, 0.0)
+    temporal = contrib.sum(axis=1) * m
+    spat_ref[...] = spatial
+    temp_ref[...] = temporal
+
+
+@functools.partial(jax.jit, static_argnames=())
+def locality_windows(windows: jnp.ndarray, mask: jnp.ndarray):
+    """Pallas-tiled locality contributions.
+
+    Args:
+      windows: (N, 32) float64, N a multiple of TILE (callers pad).
+      mask: (N,) float64 validity mask.
+
+    Returns:
+      (spatial_sum, temporal_sum) scalars (f64).
+    """
+    n = windows.shape[0]
+    assert n % TILE == 0, f"window count {n} must be a multiple of {TILE}"
+    grid = (n // TILE,)
+    spatial, temporal = pl.pallas_call(
+        _locality_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, WINDOW), lambda i: (i, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float64),
+            jax.ShapeDtypeStruct((n,), jnp.float64),
+        ],
+        interpret=True,
+    )(windows, mask)
+    return spatial.sum(), temporal.sum()

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `locality_windows_ref` mirrors the
+Rust implementation in ``rust/src/methodology/locality.rs`` (the paper's
+Eq. 1/2 at word granularity over 32-reference windows), and
+`kmeans_assign_ref` mirrors ``methodology::cluster::kmeans_assign``.
+pytest checks the Pallas kernels against these; the Rust runtime then
+cross-checks the compiled artifacts against its own implementation,
+closing the three-way loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+WINDOW = 32
+
+
+def pow2_floor(k):
+    """Largest power of two <= k, exact for k in [1, 32].
+
+    XLA's log2 lowering is not exact at powers of two (log2(8) can
+    return 2.9999999999999996), so floor(log2(k)) silently drops a bin;
+    a compare/select chain avoids the transcendental entirely.
+    """
+    return jnp.where(
+        k >= 32.0,
+        32.0,
+        jnp.where(
+            k >= 16.0,
+            16.0,
+            jnp.where(k >= 8.0, 8.0, jnp.where(k >= 4.0, 4.0, jnp.where(k >= 2.0, 2.0, 1.0))),
+        ),
+    )
+
+
+
+
+def locality_windows_ref(windows: jnp.ndarray, mask: jnp.ndarray):
+    """Per-window locality contributions.
+
+    Args:
+      windows: (N, 32) float64 word addresses (integers stored exactly).
+      mask: (N,) float64, 1.0 for valid windows, 0.0 for padding.
+
+    Returns:
+      (spatial_sum, temporal_sum): scalars, each the sum of the
+      per-window contributions over valid windows. The caller divides by
+      `n_windows` and `n_windows * 32` respectively.
+    """
+    a = windows.astype(jnp.float64)
+    d = jnp.abs(a[:, :, None] - a[:, None, :])  # (N, 32, 32)
+    big = jnp.float64(2**62)
+    # Spatial: min non-zero pairwise distance -> 1/min (0 if none).
+    dm = jnp.where(d == 0.0, big, d)
+    min_stride = dm.min(axis=(1, 2))  # (N,)
+    spatial = jnp.where(min_stride >= big, 0.0, 1.0 / min_stride)
+    # Temporal: per position, occurrence count k of its address.
+    eq = (d == 0.0).astype(jnp.float64)  # includes self: k_i = sum_j eq
+    k = eq.sum(axis=2)  # (N, 32)
+    contrib = jnp.where(k >= 2.0, pow2_floor(k) / k, 0.0)
+    temporal = contrib.sum(axis=1)  # (N,)
+    return (spatial * mask).sum(), (temporal * mask).sum()
+
+
+def kmeans_assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment.
+
+    Args:
+      points: (N, F) float.
+      centroids: (K, F) float.
+
+    Returns:
+      (N,) int32 index of the nearest centroid (squared-L2).
+    """
+    d2 = ((points[:, None, :] - centroids[None, :, :]) ** 2).sum(axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_update_ref(points, centroids, mask):
+    """One full Lloyd iteration (assignment + masked centroid update)."""
+    assign = kmeans_assign_ref(points, centroids)
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    onehot = onehot * mask[:, None]
+    counts = onehot.sum(axis=0)  # (K,)
+    sums = onehot.T @ points  # (K, F)
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+    return assign, new

@@ -1,0 +1,57 @@
+"""Layer-2 JAX models: the Step-2 analytics pipelines, composed from the
+Layer-1 Pallas kernels and lowered once by aot.py.
+
+Two entry points, each a fixed-shape jitted function:
+
+* ``locality_chunk`` — one trace chunk of CHUNK_WINDOWS x 32 word
+  addresses + validity mask -> (spatial_sum, temporal_sum, n_valid).
+  The Rust runtime streams a function's trace through this artifact in
+  chunks and combines the partial sums.
+* ``kmeans_iteration`` — padded (64, 8) feature matrix + (8, 8)
+  centroids + mask -> (assignments, new centroids). Rust iterates to a
+  fixed point.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import kmeans as kmeans_kernel
+from .kernels import locality as locality_kernel
+
+# Fixed artifact geometry (must match rust/src/runtime/analytics.rs).
+CHUNK_WINDOWS = 4096
+WINDOW = locality_kernel.WINDOW  # 32
+KM_POINTS = kmeans_kernel.N_POINTS  # 64
+KM_CENTROIDS = kmeans_kernel.N_CENTROIDS  # 8
+KM_FEATURES = kmeans_kernel.N_FEATURES  # 8
+
+
+def locality_chunk(windows, mask):
+    """(CHUNK_WINDOWS, 32) f64 addresses + (CHUNK_WINDOWS,) f64 mask ->
+    (spatial_sum, temporal_sum, n_valid), all f64 scalars."""
+    spatial, temporal = locality_kernel.locality_windows(windows, mask)
+    return spatial, temporal, mask.sum()
+
+
+def kmeans_iteration(points, centroids, mask):
+    """One Lloyd iteration over the padded feature matrix.
+
+    Returns (assignments (N,) i32, new_centroids (K, F) f32).
+    """
+    assign, new = kmeans_kernel.kmeans_step(points, centroids, mask)
+    return assign, new
+
+
+def locality_example_args():
+    spec = jax.ShapeDtypeStruct((CHUNK_WINDOWS, WINDOW), jnp.float64)
+    mask = jax.ShapeDtypeStruct((CHUNK_WINDOWS,), jnp.float64)
+    return (spec, mask)
+
+
+def kmeans_example_args():
+    pts = jax.ShapeDtypeStruct((KM_POINTS, KM_FEATURES), jnp.float32)
+    cent = jax.ShapeDtypeStruct((KM_CENTROIDS, KM_FEATURES), jnp.float32)
+    mask = jax.ShapeDtypeStruct((KM_POINTS,), jnp.float32)
+    return (pts, cent, mask)

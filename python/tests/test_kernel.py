@@ -1,0 +1,182 @@
+"""Correctness tests: Pallas kernels vs pure-jnp oracles vs brute force.
+
+The Pallas locality/k-means kernels are the Layer-1 hot path compiled
+into the AOT artifacts; any divergence from the reference semantics
+silently corrupts Step 2 of the methodology, so these tests are the core
+correctness signal of the Python side.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import kmeans as km
+from compile.kernels import locality as loc
+from compile.kernels import ref
+from compile import model
+
+TILE = loc.TILE
+W = loc.WINDOW
+
+
+def brute_locality(windows: np.ndarray, mask: np.ndarray):
+    """Independent O(W^2) numpy implementation, mirroring the paper text."""
+    spatial_sum = 0.0
+    temporal_sum = 0.0
+    for w, m in zip(windows, mask):
+        if m == 0.0:
+            continue
+        # Spatial: min non-zero pairwise |distance|.
+        best = None
+        for i in range(len(w)):
+            for j in range(i + 1, len(w)):
+                d = abs(int(w[i]) - int(w[j]))
+                if d > 0 and (best is None or d < best):
+                    best = d
+        spatial_sum += 0.0 if best is None else 1.0 / best
+        # Temporal: per unique address with k >= 2, add 2^floor(log2 k).
+        vals, counts = np.unique(np.asarray(w, dtype=np.int64), return_counts=True)
+        for k in counts:
+            if k >= 2:
+                temporal_sum += float(2 ** int(np.floor(np.log2(k))))
+    return spatial_sum, temporal_sum
+
+
+def pad_windows(windows: np.ndarray):
+    """Pad to a TILE multiple with masked-out windows."""
+    n = windows.shape[0]
+    n_pad = (-n) % TILE
+    if n_pad:
+        pad = np.zeros((n_pad, W), dtype=np.float64)
+        windows = np.concatenate([windows, pad], axis=0)
+    mask = np.concatenate([np.ones(n), np.zeros(n_pad)])
+    return jnp.asarray(windows, dtype=jnp.float64), jnp.asarray(mask, dtype=jnp.float64)
+
+
+addresses = st.integers(min_value=0, max_value=2**40)
+
+
+@st.composite
+def window_arrays(draw, max_windows=6):
+    n = draw(st.integers(min_value=1, max_value=max_windows))
+    kind = draw(st.sampled_from(["random", "sequential", "repeats", "strided"]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    if kind == "random":
+        w = rng.integers(0, 2**40, size=(n, W))
+    elif kind == "sequential":
+        start = draw(addresses)
+        w = (start + np.arange(n * W)).reshape(n, W)
+    elif kind == "repeats":
+        base = rng.integers(0, 2**20, size=(n, 4))
+        w = base[:, rng.integers(0, 4, size=W)]
+    else:
+        stride = draw(st.integers(1, 4096))
+        start = draw(st.integers(0, 2**30))
+        w = (start + stride * np.arange(n * W)).reshape(n, W)
+    return w.astype(np.float64)
+
+
+class TestLocalityKernel:
+    def test_sequential_window_spatial_one(self):
+        w = np.arange(TILE * W, dtype=np.float64).reshape(TILE, W)
+        windows, mask = pad_windows(w)
+        s, t = loc.locality_windows(windows, mask)
+        assert float(s) == pytest.approx(TILE, rel=1e-12)
+        assert float(t) == 0.0
+
+    def test_single_address_temporal_full(self):
+        w = np.full((TILE, W), 7.0)
+        windows, mask = pad_windows(w)
+        s, t = loc.locality_windows(windows, mask)
+        assert float(s) == 0.0
+        # k=32 -> 2^5 per window.
+        assert float(t) == pytest.approx(32.0 * TILE, rel=1e-12)
+
+    def test_mask_excludes_padding(self):
+        w = np.arange(W, dtype=np.float64).reshape(1, W)
+        windows, mask = pad_windows(w)
+        s, _ = loc.locality_windows(windows, mask)
+        assert float(s) == pytest.approx(1.0, rel=1e-12)
+
+    @settings(max_examples=25, deadline=None)
+    @given(window_arrays())
+    def test_pallas_matches_ref(self, w):
+        windows, mask = pad_windows(w)
+        s_p, t_p = loc.locality_windows(windows, mask)
+        s_r, t_r = ref.locality_windows_ref(windows, mask)
+        np.testing.assert_allclose(float(s_p), float(s_r), rtol=1e-12)
+        np.testing.assert_allclose(float(t_p), float(t_r), rtol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(window_arrays(max_windows=3))
+    def test_ref_matches_brute_force(self, w):
+        windows, mask = pad_windows(w)
+        s_r, t_r = ref.locality_windows_ref(windows, mask)
+        s_b, t_b = brute_locality(np.asarray(windows), np.asarray(mask))
+        np.testing.assert_allclose(float(s_r), s_b, rtol=1e-12)
+        np.testing.assert_allclose(float(t_r), t_b, rtol=1e-12)
+
+    def test_large_address_precision(self):
+        # Word addresses up to 2^40 must survive the f64 path exactly.
+        base = float(2**40 - 64)
+        w = (base + np.arange(W, dtype=np.float64)).reshape(1, W)
+        windows, mask = pad_windows(w)
+        s, t = loc.locality_windows(windows, mask)
+        assert float(s) == pytest.approx(1.0, rel=1e-12)
+        assert float(t) == 0.0
+
+
+class TestKmeansKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, km.N_CENTROIDS))
+    def test_assign_matches_ref(self, seed, k):
+        rng = np.random.default_rng(seed)
+        pts = jnp.asarray(rng.normal(size=(km.N_POINTS, km.N_FEATURES)), dtype=jnp.float32)
+        cent = jnp.asarray(rng.normal(size=(k, km.N_FEATURES)), dtype=jnp.float32)
+        a_p = km.kmeans_assign(pts, cent)
+        a_r = ref.kmeans_assign_ref(pts, cent)
+        np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_r))
+
+    def test_step_matches_ref(self):
+        rng = np.random.default_rng(3)
+        pts = jnp.asarray(rng.normal(size=(km.N_POINTS, km.N_FEATURES)), dtype=jnp.float32)
+        cent = jnp.asarray(rng.normal(size=(km.N_CENTROIDS, km.N_FEATURES)), dtype=jnp.float32)
+        mask = jnp.asarray((np.arange(km.N_POINTS) < 44).astype(np.float32))
+        a_p, c_p = km.kmeans_step(pts, cent, mask)
+        a_r, c_r = ref.kmeans_update_ref(pts, cent, mask)
+        np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_r))
+        np.testing.assert_allclose(np.asarray(c_p), np.asarray(c_r), rtol=1e-6)
+
+    def test_two_blobs_converge(self):
+        rng = np.random.default_rng(9)
+        a = rng.normal(size=(32, km.N_FEATURES)) * 0.05
+        b = rng.normal(size=(32, km.N_FEATURES)) * 0.05 + 3.0
+        pts = jnp.asarray(np.concatenate([a, b]), dtype=jnp.float32)
+        mask = jnp.ones(64, dtype=jnp.float32)
+        cent = jnp.asarray(rng.normal(size=(km.N_CENTROIDS, km.N_FEATURES)), dtype=jnp.float32)
+        for _ in range(10):
+            assign, cent = km.kmeans_step(pts, cent, mask)
+        assign = np.asarray(assign)
+        assert len(set(assign[:32])) == 1
+        assert len(set(assign[32:])) == 1
+        assert assign[0] != assign[32]
+
+
+class TestModelShapes:
+    def test_locality_chunk_shapes(self):
+        w = jnp.zeros((model.CHUNK_WINDOWS, model.WINDOW), dtype=jnp.float64)
+        m = jnp.zeros((model.CHUNK_WINDOWS,), dtype=jnp.float64)
+        s, t, n = model.locality_chunk(w, m)
+        assert s.shape == () and t.shape == () and n.shape == ()
+
+    def test_kmeans_iteration_shapes(self):
+        pts, cent, mask = (jnp.zeros(s.shape, s.dtype) for s in model.kmeans_example_args())
+        a, c = model.kmeans_iteration(pts, cent, mask)
+        assert a.shape == (model.KM_POINTS,)
+        assert a.dtype == jnp.int32
+        assert c.shape == (model.KM_CENTROIDS, model.KM_FEATURES)

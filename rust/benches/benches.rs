@@ -1,0 +1,145 @@
+//! Benchmarks (criterion is unavailable offline; this is a small
+//! warmup+median harness with the same discipline). Run `cargo bench`.
+//!
+//! Two groups:
+//! * **hot paths** — replay throughput, trace generation, locality
+//!   analytics (Rust and PJRT) — the §Perf optimization targets;
+//! * **paper harness** — time to regenerate one representative figure
+//!   of each family end-to-end (the `damov report` machinery).
+
+use damov::methodology::locality;
+use damov::methodology::step3::{profile_function, SweepOptions};
+use damov::runtime::{artifact, Analytics};
+use damov::sim::{simulate, CoreModel, SystemConfig};
+use damov::workloads::{registry, Scale};
+use std::time::Instant;
+
+struct Bench {
+    name: &'static str,
+    /// (seconds per iteration, optional units processed per iteration)
+    run: Box<dyn FnMut() -> Option<f64>>,
+}
+
+fn time_it<F: FnMut() -> Option<f64>>(mut f: F, min_iters: usize) -> (f64, Option<f64>) {
+    // Warmup.
+    let mut units = f();
+    let mut samples = Vec::new();
+    for _ in 0..min_iters {
+        let t0 = Instant::now();
+        units = f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], units)
+}
+
+fn main() {
+    let mut benches: Vec<Bench> = Vec::new();
+
+    // --- hot paths ---
+    let spec = registry::by_code("STRTriad").unwrap();
+    let trace = spec.trace(4, Scale::full());
+    let n_acc: f64 = trace.iter().map(Vec::len).sum::<usize>() as f64;
+    let cfg = SystemConfig::host(4, CoreModel::OutOfOrder);
+    benches.push(Bench {
+        name: "replay/stream_host_4c",
+        run: Box::new(move || {
+            let r = simulate(&cfg, &trace);
+            std::hint::black_box(r.time_s);
+            Some(n_acc)
+        }),
+    });
+
+    let gspec = registry::by_code("LIGPrkEmd").unwrap();
+    let gtrace = gspec.trace(4, Scale::full());
+    let gn: f64 = gtrace.iter().map(Vec::len).sum::<usize>() as f64;
+    let gcfg = SystemConfig::host(4, CoreModel::OutOfOrder);
+    benches.push(Bench {
+        name: "replay/graph_host_4c",
+        run: Box::new(move || {
+            let r = simulate(&gcfg, &gtrace);
+            std::hint::black_box(r.time_s);
+            Some(gn)
+        }),
+    });
+
+    let nspec = registry::by_code("PLYGramSch").unwrap();
+    let ntrace = nspec.trace(64, Scale::full());
+    let nn: f64 = ntrace.iter().map(Vec::len).sum::<usize>() as f64;
+    let ncfg = SystemConfig::ndp(64, CoreModel::OutOfOrder);
+    benches.push(Bench {
+        name: "replay/contention_ndp_64c",
+        run: Box::new(move || {
+            let r = simulate(&ncfg, &ntrace);
+            std::hint::black_box(r.time_s);
+            Some(nn)
+        }),
+    });
+
+    let tspec = registry::by_code("LIGPrkEmd").unwrap();
+    benches.push(Bench {
+        name: "tracegen/graph_64c",
+        run: Box::new(move || {
+            let t = tspec.trace(64, Scale::full());
+            let n: usize = t.iter().map(Vec::len).sum();
+            std::hint::black_box(&t);
+            Some(n as f64)
+        }),
+    });
+
+    let lspec = registry::by_code("STRTriad").unwrap();
+    let ltrace = lspec.locality_trace(Scale::full());
+    let lwords = locality::word_trace(&ltrace);
+    let lw2 = lwords.clone();
+    let ln = lwords.len() as f64;
+    benches.push(Bench {
+        name: "locality/rust",
+        run: Box::new(move || {
+            let m = locality::locality_of_words(&lw2);
+            std::hint::black_box(m.spatial);
+            Some(ln)
+        }),
+    });
+
+    if artifact::artifacts_available() {
+        let an = Analytics::load(&artifact::default_artifact_dir()).expect("artifacts");
+        let lw3 = lwords.clone();
+        benches.push(Bench {
+            name: "locality/pjrt_artifact",
+            run: Box::new(move || {
+                let m = an.locality_of_words(&lw3).expect("pjrt");
+                std::hint::black_box(m.spatial);
+                Some(ln)
+            }),
+        });
+    } else {
+        eprintln!("[bench] artifacts not built; skipping locality/pjrt_artifact");
+    }
+
+    // --- paper harness (one figure per family) ---
+    let fspec = registry::by_code("CHAHsti").unwrap();
+    benches.push(Bench {
+        name: "harness/profile_one_function_full_sweep",
+        run: Box::new(move || {
+            let p = profile_function(
+                &fspec,
+                SweepOptions {
+                    scale: Scale(0.5),
+                    ..Default::default()
+                },
+            );
+            std::hint::black_box(p.mpki);
+            None
+        }),
+    });
+
+    println!("{:45} {:>12} {:>14}", "benchmark", "median", "throughput");
+    println!("{}", "-".repeat(73));
+    for b in benches.iter_mut() {
+        let (median, units) = time_it(&mut b.run, 5);
+        let thr = units
+            .map(|u| format!("{:>10.1} M/s", u / median / 1e6))
+            .unwrap_or_else(|| "-".to_string());
+        println!("{:45} {:>10.2}ms {:>14}", b.name, median * 1e3, thr);
+    }
+}

@@ -1,0 +1,115 @@
+//! Experiment coordinator: schedules the full characterization sweep
+//! across worker threads, persists profiles to the results store, and
+//! regenerates every paper table/figure through the report harness.
+
+pub mod reports;
+pub mod store;
+
+use crate::methodology::step3::{profile_all, FunctionProfile, SweepOptions};
+use crate::sim::CoreModel;
+use crate::workloads::{registry, FunctionSpec, Scale};
+use std::path::{Path, PathBuf};
+
+/// Top-level driver owning the profile cache.
+pub struct Coordinator {
+    pub results_dir: PathBuf,
+    pub threads: usize,
+}
+
+impl Coordinator {
+    pub fn new(results_dir: impl Into<PathBuf>, threads: usize) -> Coordinator {
+        let results_dir = results_dir.into();
+        std::fs::create_dir_all(&results_dir).ok();
+        Coordinator {
+            results_dir,
+            threads,
+        }
+    }
+
+    fn cache_path(&self, tag: &str) -> PathBuf {
+        self.results_dir.join(format!("profiles-{tag}.json"))
+    }
+
+    /// Profile the given functions, using the on-disk cache when the tag
+    /// matches a previous run (pass `refresh=true` to force recompute).
+    pub fn profiles(
+        &self,
+        tag: &str,
+        specs: &[FunctionSpec],
+        opt: SweepOptions,
+        refresh: bool,
+    ) -> Vec<FunctionProfile> {
+        let path = self.cache_path(tag);
+        if !refresh {
+            if let Some(cached) = store::load_profiles(&path) {
+                if cached.len() == specs.len() {
+                    return cached;
+                }
+            }
+        }
+        let profiles = profile_all(specs, opt, self.threads);
+        if let Err(e) = store::save_profiles(&path, &profiles) {
+            eprintln!("warning: could not persist profiles to {path:?}: {e}");
+        }
+        profiles
+    }
+
+    /// The 44 representatives at full scale with both core models and
+    /// the NUCA variant — everything the report suite needs.
+    pub fn representative_profiles(&self, refresh: bool) -> Vec<FunctionProfile> {
+        let specs = registry::representatives();
+        let opt = SweepOptions {
+            core_models: &[CoreModel::OutOfOrder, CoreModel::InOrder],
+            nuca: true,
+            scale: Scale::full(),
+        };
+        self.profiles("reps", &specs, opt, refresh)
+    }
+
+    /// The 100 held-out validation variants (out-of-order host/NDP only —
+    /// what the validation needs).
+    pub fn holdout_profiles(&self, refresh: bool) -> Vec<FunctionProfile> {
+        let specs = registry::validation_variants();
+        let opt = SweepOptions {
+            core_models: &[CoreModel::OutOfOrder],
+            nuca: false,
+            scale: Scale::full(),
+        };
+        self.profiles("holdout", &specs, opt, refresh)
+    }
+}
+
+/// Resolve the default results directory (`results/` beside Cargo.toml).
+pub fn default_results_dir() -> PathBuf {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    if p.parent().map(|d| d.exists()).unwrap_or(false) {
+        p
+    } else {
+        PathBuf::from("results")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_caches_profiles() {
+        let dir = std::env::temp_dir().join(format!("damov-test-{}", std::process::id()));
+        let coord = Coordinator::new(&dir, 4);
+        let specs: Vec<_> = registry::representatives().into_iter().take(2).collect();
+        let opt = SweepOptions {
+            scale: Scale(0.05),
+            ..Default::default()
+        };
+        let a = coord.profiles("t", &specs, opt, true);
+        assert_eq!(a.len(), 2);
+        // Second call must hit the cache (same values back).
+        let b = coord.profiles("t", &specs, opt, false);
+        assert_eq!(b.len(), 2);
+        assert_eq!(a[0].code, b[0].code);
+        assert!((a[0].mpki - b[0].mpki).abs() < 1e-9);
+        assert_eq!(a[0].runs.len(), b[0].runs.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

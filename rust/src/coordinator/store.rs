@@ -1,0 +1,334 @@
+//! Results store: JSON (de)serialization of function profiles.
+//!
+//! The full characterization sweep takes minutes; persisting profiles
+//! lets `damov report <fig>` regenerate any figure instantly and gives
+//! downstream users a machine-readable results database.
+
+use crate::methodology::locality::LocalityMetrics;
+use crate::methodology::step3::{FunctionProfile, Run};
+use crate::sim::engine::SimResult;
+use crate::sim::{CoreModel, SystemKind};
+use crate::util::json::Json;
+use std::path::Path;
+
+fn kind_label(k: SystemKind) -> &'static str {
+    k.label()
+}
+
+fn kind_parse(s: &str) -> Option<SystemKind> {
+    match s {
+        "host" => Some(SystemKind::Host),
+        "host+pf" => Some(SystemKind::HostPrefetch),
+        "ndp" => Some(SystemKind::Ndp),
+        "host-nuca" => Some(SystemKind::HostNuca),
+        _ => None,
+    }
+}
+
+fn model_label(m: CoreModel) -> &'static str {
+    match m {
+        CoreModel::OutOfOrder => "ooo",
+        CoreModel::InOrder => "inorder",
+    }
+}
+
+fn model_parse(s: &str) -> Option<CoreModel> {
+    match s {
+        "ooo" => Some(CoreModel::OutOfOrder),
+        "inorder" => Some(CoreModel::InOrder),
+        _ => None,
+    }
+}
+
+fn f64s(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+fn u64s(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn arr_f64(j: &Json, key: &str) -> Vec<f64> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+fn sim_to_json(r: &SimResult) -> Json {
+    let mut j = Json::obj();
+    j.set("time_s", r.time_s)
+        .set("cycles", r.cycles)
+        .set("instr", r.instr)
+        .set("ipc", r.ipc)
+        .set("memory_bound", r.memory_bound)
+        .set("l1_hits", r.l1_hits)
+        .set("l1_misses", r.l1_misses)
+        .set("l2_hits", r.l2_hits)
+        .set("l2_misses", r.l2_misses)
+        .set("l3_hits", r.l3_hits)
+        .set("l3_misses", r.l3_misses)
+        .set("mpki", r.mpki)
+        .set("lfmr", r.lfmr)
+        .set("ai", r.ai)
+        .set("amat", r.amat)
+        .set("amat_parts", r.amat_parts.to_vec())
+        .set("level_fracs", r.level_fracs.to_vec())
+        .set("dram_reads", r.dram_reads)
+        .set("dram_writes", r.dram_writes)
+        .set("row_hit_rate", r.row_hit_rate)
+        .set("bw", r.bw_bytes_s)
+        .set("rho", r.dram_rho)
+        .set("dram_loaded_lat", r.dram_loaded_lat)
+        .set("vault_imbalance", r.vault_imbalance)
+        .set("pf_issued", r.pf_issued)
+        .set("pf_accuracy", r.pf_accuracy)
+        .set("noc_mean_hops", r.noc_mean_hops)
+        .set(
+            "hop_hist",
+            r.hop_hist.iter().map(|&x| x as f64).collect::<Vec<f64>>(),
+        )
+        .set(
+            "bb_llc",
+            // Store only nonzero entries as [bb, count] pairs.
+            Json::Arr(
+                r.bb_llc_misses
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(bb, &c)| Json::Arr(vec![Json::Num(bb as f64), Json::Num(c as f64)]))
+                    .collect(),
+            ),
+        )
+        .set("e_l1", r.energy.l1)
+        .set("e_l2", r.energy.l2)
+        .set("e_l3", r.energy.l3)
+        .set("e_dram", r.energy.dram)
+        .set("e_link", r.energy.link)
+        .set("e_noc", r.energy.noc);
+    j
+}
+
+fn sim_from_json(kind: SystemKind, core_model: CoreModel, cores: usize, j: &Json) -> SimResult {
+    let mut bb = vec![0u64; 256];
+    if let Some(pairs) = j.get("bb_llc").and_then(Json::as_arr) {
+        for p in pairs {
+            if let Some(pair) = p.as_arr() {
+                if pair.len() == 2 {
+                    let idx = pair[0].as_f64().unwrap_or(0.0) as usize;
+                    if idx < 256 {
+                        bb[idx] = pair[1].as_f64().unwrap_or(0.0) as u64;
+                    }
+                }
+            }
+        }
+    }
+    let to4 = |v: Vec<f64>| -> [f64; 4] {
+        let mut out = [0.0; 4];
+        for (i, x) in v.into_iter().take(4).enumerate() {
+            out[i] = x;
+        }
+        out
+    };
+    SimResult {
+        kind,
+        core_model,
+        cores,
+        time_s: f64s(j, "time_s"),
+        cycles: f64s(j, "cycles"),
+        instr: u64s(j, "instr"),
+        ipc: f64s(j, "ipc"),
+        memory_bound: f64s(j, "memory_bound"),
+        l1_hits: u64s(j, "l1_hits"),
+        l1_misses: u64s(j, "l1_misses"),
+        l2_hits: u64s(j, "l2_hits"),
+        l2_misses: u64s(j, "l2_misses"),
+        l3_hits: u64s(j, "l3_hits"),
+        l3_misses: u64s(j, "l3_misses"),
+        mpki: f64s(j, "mpki"),
+        lfmr: f64s(j, "lfmr"),
+        ai: f64s(j, "ai"),
+        amat: f64s(j, "amat"),
+        amat_parts: to4(arr_f64(j, "amat_parts")),
+        level_fracs: to4(arr_f64(j, "level_fracs")),
+        dram_reads: u64s(j, "dram_reads"),
+        dram_writes: u64s(j, "dram_writes"),
+        row_hit_rate: f64s(j, "row_hit_rate"),
+        bw_bytes_s: f64s(j, "bw"),
+        dram_rho: f64s(j, "rho"),
+        dram_loaded_lat: f64s(j, "dram_loaded_lat"),
+        vault_imbalance: f64s(j, "vault_imbalance"),
+        pf_issued: u64s(j, "pf_issued"),
+        pf_accuracy: f64s(j, "pf_accuracy"),
+        noc_mean_hops: f64s(j, "noc_mean_hops"),
+        hop_hist: arr_f64(j, "hop_hist").into_iter().map(|x| x as u64).collect(),
+        bb_llc_misses: bb,
+        energy: crate::sim::energy::EnergyBreakdown {
+            l1: f64s(j, "e_l1"),
+            l2: f64s(j, "e_l2"),
+            l3: f64s(j, "e_l3"),
+            dram: f64s(j, "e_dram"),
+            link: f64s(j, "e_link"),
+            noc: f64s(j, "e_noc"),
+        },
+    }
+}
+
+pub fn profile_to_json(p: &FunctionProfile) -> Json {
+    let mut j = Json::obj();
+    j.set("code", p.code.as_str())
+        .set("input", p.input.as_str())
+        .set("suite", p.suite.as_str())
+        .set("paper_class", p.paper_class.map(Json::from).unwrap_or(Json::Null))
+        .set("family_class", p.family_class)
+        .set("representative", p.representative)
+        .set("spatial", p.locality.spatial)
+        .set("temporal", p.locality.temporal)
+        .set("windows", p.locality.windows)
+        .set("ai", p.ai)
+        .set("mpki", p.mpki)
+        .set("lfmr", p.lfmr)
+        .set("memory_bound", p.memory_bound)
+        .set("lfmr_by_cores", p.lfmr_by_cores.clone())
+        .set(
+            "runs",
+            Json::Arr(
+                p.runs
+                    .iter()
+                    .map(|r| {
+                        let mut jr = Json::obj();
+                        jr.set("kind", kind_label(r.kind))
+                            .set("model", model_label(r.core_model))
+                            .set("cores", r.cores)
+                            .set("result", sim_to_json(&r.result));
+                        jr
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+fn static_class(s: &str) -> Option<&'static str> {
+    // Map back onto the static labels used across the crate.
+    ["1a", "1b", "1c", "2a", "2b", "2c"]
+        .into_iter()
+        .find(|&c| c == s)
+}
+
+pub fn profile_from_json(j: &Json) -> Option<FunctionProfile> {
+    let runs = j
+        .get("runs")?
+        .as_arr()?
+        .iter()
+        .filter_map(|jr| {
+            let kind = kind_parse(jr.get("kind")?.as_str()?)?;
+            let model = model_parse(jr.get("model")?.as_str()?)?;
+            let cores = jr.get("cores")?.as_f64()? as usize;
+            let result = sim_from_json(kind, model, cores, jr.get("result")?);
+            Some(Run {
+                kind,
+                core_model: model,
+                cores,
+                result,
+            })
+        })
+        .collect::<Vec<_>>();
+    Some(FunctionProfile {
+        code: j.get("code")?.as_str()?.to_string(),
+        input: j.get("input")?.as_str()?.to_string(),
+        suite: j.get("suite")?.as_str()?.to_string(),
+        paper_class: j
+            .get("paper_class")
+            .and_then(Json::as_str)
+            .and_then(static_class),
+        family_class: static_class(j.get("family_class")?.as_str()?)?,
+        representative: j.get("representative")?.as_bool()?,
+        locality: LocalityMetrics {
+            spatial: f64s(j, "spatial"),
+            temporal: f64s(j, "temporal"),
+            windows: u64s(j, "windows") as usize,
+        },
+        ai: f64s(j, "ai"),
+        mpki: f64s(j, "mpki"),
+        lfmr: f64s(j, "lfmr"),
+        memory_bound: f64s(j, "memory_bound"),
+        lfmr_by_cores: arr_f64(j, "lfmr_by_cores"),
+        runs,
+    })
+}
+
+pub fn save_profiles(path: &Path, profiles: &[FunctionProfile]) -> std::io::Result<()> {
+    let j = Json::Arr(profiles.iter().map(profile_to_json).collect());
+    std::fs::write(path, j.to_string_pretty())
+}
+
+pub fn load_profiles(path: &Path) -> Option<Vec<FunctionProfile>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let arr = j.as_arr()?;
+    let profiles: Vec<FunctionProfile> = arr.iter().filter_map(profile_from_json).collect();
+    if profiles.len() == arr.len() {
+        Some(profiles)
+    } else {
+        None // corrupt/partial cache: recompute
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methodology::step3::{profile_function, SweepOptions};
+    use crate::workloads::{registry, Scale};
+
+    #[test]
+    fn profile_roundtrips_through_json() {
+        let spec = registry::by_code("STRCpy").unwrap();
+        let p = profile_function(
+            &spec,
+            SweepOptions {
+                scale: Scale(0.05),
+                ..Default::default()
+            },
+        );
+        let j = profile_to_json(&p);
+        let text = j.to_string_pretty();
+        let back = profile_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.code, p.code);
+        assert_eq!(back.runs.len(), p.runs.len());
+        assert!((back.mpki - p.mpki).abs() < 1e-9);
+        assert!((back.locality.temporal - p.locality.temporal).abs() < 1e-9);
+        let a = &p.runs[3].result;
+        let b = &back.runs[3].result;
+        assert!((a.time_s - b.time_s).abs() < 1e-18);
+        assert_eq!(a.l3_misses, b.l3_misses);
+        assert!((a.energy.total() - b.energy.total()).abs() < 1e-15);
+        assert_eq!(a.bb_llc_misses, b.bb_llc_misses);
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let spec = registry::by_code("STRSca").unwrap();
+        let p = profile_function(
+            &spec,
+            SweepOptions {
+                scale: Scale(0.05),
+                ..Default::default()
+            },
+        );
+        let path = std::env::temp_dir().join(format!("damov-store-{}.json", std::process::id()));
+        save_profiles(&path, std::slice::from_ref(&p)).unwrap();
+        let loaded = load_profiles(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].code, p.code);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_cache_returns_none() {
+        let path = std::env::temp_dir().join(format!("damov-bad-{}.json", std::process::id()));
+        std::fs::write(&path, "[{\"code\": 42}]").unwrap();
+        assert!(load_profiles(&path).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! # DAMOV reproduction library
+//!
+//! A from-scratch reproduction of *"DAMOV: A New Methodology and Benchmark
+//! Suite for Evaluating Data Movement Bottlenecks"* (Oliveira et al., 2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`sim`] — the DAMOV-SIM substrate (caches, MSHRs, stream prefetcher,
+//!   HMC DRAM with vault/bank/row-buffer model, NoC/NUCA, energy, core
+//!   timing for out-of-order and in-order cores).
+//! * [`workloads`] — the benchmark suite: deterministic trace generators
+//!   reproducing the access patterns of the paper's 44 representative
+//!   functions (plus input variants for the 144-function validation set).
+//! * [`methodology`] — the paper's contribution: the three-step
+//!   characterization pipeline (memory-bound identification, locality
+//!   clustering, scalability-based bottleneck classification) and the
+//!   six-class model.
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   analytics artifacts (locality metrics, k-means) produced by
+//!   `python/compile/aot.py`.
+//! * [`coordinator`] — parallel experiment scheduler, results store, and
+//!   the report harness that regenerates every paper table and figure.
+//! * [`util`] — in-repo infrastructure substrates (PRNG, JSON, CLI,
+//!   thread pool, stats, property-testing harness).
+
+pub mod coordinator;
+pub mod methodology;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,332 @@
+//! `damov` — CLI for the DAMOV reproduction.
+//!
+//! Commands:
+//!   damov list                          list the 144 suite functions
+//!   damov config                        print Table 1
+//!   damov sim --code C [...]            simulate one function on one system
+//!   damov characterize --code C         run the 3-step methodology on one function
+//!   damov report <id>|all [...]         regenerate paper tables/figures
+//!   damov validate                      §3.5 two-phase validation
+//!
+//! Common options: --threads N, --scale X, --refresh, --results DIR,
+//! --cores N, --system host|host+pf|ndp|host-nuca, --inorder.
+
+use damov::coordinator::{default_results_dir, reports, Coordinator};
+use damov::methodology::classify::{self, Features};
+use damov::methodology::locality;
+use damov::methodology::step3::{profile_function, SweepOptions};
+use damov::runtime::{artifact, Analytics};
+use damov::sim::{simulate, CoreModel, SystemConfig, SystemKind};
+use damov::util::cli::Args;
+use damov::util::pool::default_threads;
+use damov::workloads::{registry, Scale};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["refresh", "inorder", "no-artifacts"]);
+    match args.command.as_deref() {
+        Some("list") => cmd_list(),
+        Some("config") => print!("{}", reports::tab1()),
+        Some("sim") => cmd_sim(&args),
+        Some("characterize") => cmd_characterize(&args),
+        Some("step1") => cmd_step1(&args),
+        Some("report") => cmd_report(&args),
+        Some("validate") => cmd_report_named(&args, &["validation"]),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: damov <list|config|sim|step1|characterize|report|validate> [options]\n\
+         see `damov report all --threads 16` to regenerate every figure"
+    );
+}
+
+fn cmd_list() {
+    println!("{:28} {:14} {:6} {}", "code", "input", "class", "representative");
+    for f in registry::all_functions() {
+        println!(
+            "{:28} {:14} {:6} {}",
+            f.id.code(),
+            f.id.input,
+            f.paper_class.unwrap_or(f.family_class),
+            f.representative
+        );
+    }
+}
+
+fn parse_system(s: &str) -> SystemKind {
+    match s {
+        "host" => SystemKind::Host,
+        "host+pf" | "pf" => SystemKind::HostPrefetch,
+        "ndp" => SystemKind::Ndp,
+        "host-nuca" | "nuca" => SystemKind::HostNuca,
+        other => {
+            eprintln!("unknown system {other:?} (host|host+pf|ndp|host-nuca)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let code = args.opt_or("code", "STRTriad");
+    let spec = registry::by_code(code).unwrap_or_else(|| {
+        eprintln!("unknown function {code:?}; see `damov list`");
+        std::process::exit(2);
+    });
+    let cores = args.opt_usize("cores", 4);
+    let scale = Scale(args.opt_f64("scale", 1.0));
+    let model = if args.flag("inorder") {
+        CoreModel::InOrder
+    } else {
+        CoreModel::OutOfOrder
+    };
+    let kind = parse_system(args.opt_or("system", "host"));
+    let cfg = SystemConfig::by_kind(kind, cores, model);
+    let trace = spec.trace(cores, scale);
+    let accesses: usize = trace.iter().map(Vec::len).sum();
+    let t0 = std::time::Instant::now();
+    let r = simulate(&cfg, &trace);
+    let wall = t0.elapsed();
+    println!(
+        "{code} on {} x{cores} ({model:?}): {accesses} accesses in {:.2?} ({:.1} M acc/s)",
+        kind.label(),
+        wall,
+        accesses as f64 / wall.as_secs_f64() / 1e6
+    );
+    println!(
+        "  perf={:.1}  ipc={:.2}  memory_bound={:.2}  mpki={:.2}  lfmr={:.3}  ai={:.2}",
+        r.perf(),
+        r.ipc,
+        r.memory_bound,
+        r.mpki,
+        r.lfmr,
+        r.ai
+    );
+    println!(
+        "  amat={:.1} cyc {:?}  level fracs={:?}",
+        r.amat,
+        r.amat_parts.map(|x| x.round()),
+        r.level_fracs.map(|x| (x * 1000.0).round() / 10.0)
+    );
+    println!(
+        "  bw={:.1} GB/s rho={:.2} row-hit={:.2} energy={:.3e} J (dram {:.0}%)",
+        r.bw_bytes_s / 1e9,
+        r.dram_rho,
+        r.row_hit_rate,
+        r.energy.total(),
+        r.energy.dram / r.energy.total().max(1e-30) * 100.0
+    );
+}
+
+/// §3.1 Step-1 scan: rank every suite function by its top-down
+/// Memory Bound %, the way the paper filters its 345-application corpus.
+fn cmd_step1(args: &Args) {
+    let scale = Scale(args.opt_f64("scale", 0.25));
+    let threads = args.opt_usize("threads", default_threads());
+    let specs = registry::all_functions();
+    eprintln!("[damov] step-1 scan over {} functions...", specs.len());
+    let mut results = damov::methodology::step1::filter_memory_bound(&specs, scale, threads);
+    results.sort_by(|a, b| b.memory_bound.partial_cmp(&a.memory_bound).unwrap());
+    println!("{:28} {:>12}  {}", "function", "mem-bound %", "selected(>30%)");
+    for r in &results {
+        println!(
+            "{:28} {:>11.1}%  {}",
+            r.code,
+            r.memory_bound * 100.0,
+            if r.selected { "yes" } else { "NO" }
+        );
+    }
+    let n_sel = results.iter().filter(|r| r.selected).count();
+    println!("
+{}/{} functions pass the 30% Memory-Bound filter", n_sel, results.len());
+}
+
+fn cmd_characterize(args: &Args) {
+    let code = args.opt_or("code", "STRTriad");
+    let spec = registry::by_code(code).unwrap_or_else(|| {
+        eprintln!("unknown function {code:?}");
+        std::process::exit(2);
+    });
+    let scale = Scale(args.opt_f64("scale", 1.0));
+    println!("Step 1: memory-bound identification");
+    let s1 = damov::methodology::step1::identify(&spec, scale);
+    println!(
+        "  memory_bound = {:.1}% -> {}",
+        s1.memory_bound * 100.0,
+        if s1.selected { "selected" } else { "not memory-bound" }
+    );
+
+    println!("Step 2: architecture-independent locality");
+    let trace = spec.locality_trace(scale);
+    let loc = if !args.flag("no-artifacts") && artifact::artifacts_available() {
+        match Analytics::load(&artifact::default_artifact_dir()) {
+            Ok(an) => {
+                let m = an.locality(&trace).expect("artifact locality");
+                println!("  (computed via AOT Pallas artifact on PJRT)");
+                m
+            }
+            Err(e) => {
+                eprintln!("  (artifact load failed: {e}; using Rust fallback)");
+                locality::locality(&trace)
+            }
+        }
+    } else {
+        locality::locality(&trace)
+    };
+    println!("  spatial = {:.3}  temporal = {:.3}", loc.spatial, loc.temporal);
+
+    println!("Step 3: scalability analysis + classification");
+    let profile = profile_function(
+        &spec,
+        SweepOptions {
+            scale,
+            ..Default::default()
+        },
+    );
+    println!(
+        "  AI = {:.2}  MPKI = {:.2}  LFMR = {:.3} (slope {:+.3})",
+        profile.ai,
+        profile.mpki,
+        profile.lfmr_mean(),
+        profile.lfmr_slope()
+    );
+    for &c in damov::sim::CORE_SWEEP.iter() {
+        println!(
+            "  {:>3} cores: host {:>8.1}  host+pf {:>8.1}  ndp {:>8.1}  (ndp/host {:.2})",
+            c,
+            profile.norm_perf(SystemKind::Host, CoreModel::OutOfOrder, c),
+            profile.norm_perf(SystemKind::HostPrefetch, CoreModel::OutOfOrder, c),
+            profile.norm_perf(SystemKind::Ndp, CoreModel::OutOfOrder, c),
+            profile.ndp_speedup(CoreModel::OutOfOrder, c),
+        );
+    }
+    // Classify against paper-calibrated default thresholds when no full
+    // representative sweep is available.
+    // Default thresholds calibrated on this repo's representative suite
+    // (the `damov validate` report derives them from data; the paper's
+    // corpus yields 0.48 / 8.5 / 11.0 / 0.56 on its own scale).
+    let thr = classify::Thresholds {
+        temporal: 0.30,
+        ai: 8.5,
+        mpki: 45.0,
+        lfmr: 0.56,
+        slope_dec: -0.25,
+        slope_inc: 0.25,
+    };
+    let mut feats = Features::of(&profile);
+    feats.temporal = loc.temporal;
+    let class = classify::classify(&feats, &thr);
+    println!(
+        "  => class {} ({}){}",
+        class.label(),
+        class.description(),
+        spec.paper_class
+            .map(|c| format!("  [paper: {c}]"))
+            .unwrap_or_default()
+    );
+}
+
+const ALL_REPORTS: [&str; 25] = [
+    "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig22",
+    "fig23", "fig24", "tab8", "validation",
+];
+
+fn cmd_report(args: &Args) {
+    let mut wanted: Vec<String> = args.positional.clone();
+    if wanted.is_empty() || wanted.iter().any(|w| w == "all") {
+        wanted = ALL_REPORTS.iter().map(|s| s.to_string()).collect();
+    }
+    let names: Vec<&str> = wanted.iter().map(String::as_str).collect();
+    cmd_report_named(args, &names);
+}
+
+fn cmd_report_named(args: &Args, wanted: &[&str]) {
+    let threads = args.opt_usize("threads", default_threads());
+    let refresh = args.flag("refresh");
+    let results_dir = args
+        .opt("results")
+        .map(Into::into)
+        .unwrap_or_else(default_results_dir);
+    let coord = Coordinator::new(&results_dir, threads);
+    let scale = Scale(args.opt_f64("scale", 1.0));
+
+    let needs_reps = wanted.iter().any(|w| !matches!(*w, "tab1" | "fig22"));
+    let needs_holdout = wanted
+        .iter()
+        .any(|w| matches!(*w, "fig18" | "tab8" | "validation" | "val"));
+
+    let reps = if needs_reps {
+        eprintln!("[damov] profiling 44 representatives ({threads} threads)...");
+        coord.representative_profiles(refresh)
+    } else {
+        Vec::new()
+    };
+    let holdout = if needs_holdout {
+        eprintln!("[damov] profiling 100 held-out variants...");
+        coord.holdout_profiles(refresh)
+    } else {
+        Vec::new()
+    };
+    let all: Vec<_> = reps.iter().chain(holdout.iter()).cloned().collect();
+
+    // Fig 3 prefers the PJRT k-means artifact when available.
+    let pjrt_fig3: Option<Vec<usize>> = if wanted.contains(&"fig3")
+        && !args.flag("no-artifacts")
+        && artifact::artifacts_available()
+    {
+        Analytics::load(&artifact::default_artifact_dir())
+            .ok()
+            .and_then(|an| an.kmeans(&reports::fig3_points(&reps), 2, 50, 42).ok())
+            .map(|(assign, _)| assign)
+    } else {
+        None
+    };
+
+    for name in wanted {
+        let text = match *name {
+            "tab1" => reports::tab1(),
+            "fig1" => reports::fig1(&reps),
+            "fig3" => reports::fig3(&reps, pjrt_fig3.as_deref()),
+            "fig4" => reports::fig4(&reps),
+            "fig5" => reports::fig5(&reps),
+            "fig6" => reports::fig6(&reps),
+            "fig7" => reports::fig_energy(&reps, "7", ["HSJNPO", "LIGPrkEmd"], "1a"),
+            "fig8" => reports::fig_amat(&reps, "8", ["CHAHsti", "PLYalu"], "1b"),
+            "fig9" => reports::fig_energy(&reps, "9", ["CHAHsti", "PLYalu"], "1b"),
+            "fig10" => reports::fig_energy(&reps, "10", ["DRKRes", "PRSFlu"], "1c"),
+            "fig11" => reports::fig11(&reps),
+            "fig12" => reports::fig_energy(&reps, "12", ["PLYGramSch", "SPLFftRev"], "2a"),
+            "fig13" => reports::fig_amat(&reps, "13", ["PLYgemver", "SPLLucb"], "2b"),
+            "fig14" => reports::fig_energy(&reps, "14", ["PLYgemver", "SPLLucb"], "2b"),
+            "fig15" => reports::fig_energy(&reps, "15", ["HPGSpm", "RODNw"], "2c"),
+            "fig16" => reports::fig16(&reps),
+            "fig17" => reports::fig17(&reps),
+            "fig18" => reports::fig18(&all),
+            "fig19" => reports::fig19(&reps),
+            "fig20" | "fig21" => reports::fig20_21(scale),
+            "fig22" => reports::fig22(),
+            "fig23" => reports::fig23(scale),
+            "fig24" | "fig25" => reports::fig24_25(&reps),
+            "tab8" => reports::tab8(&reps, &holdout),
+            "validation" | "val" => reports::validation(&reps, &holdout),
+            other => {
+                eprintln!("unknown report {other:?}");
+                continue;
+            }
+        };
+        println!("{text}");
+        let path = results_dir.join(format!("{name}.txt"));
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("warning: could not write {path:?}: {e}");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Memory-bottleneck classification (paper §3.3) and its validation
+//! (§3.5.1).
+//!
+//! The six classes are defined over five features: temporal locality
+//! (Step 2), AI, LLC MPKI, LFMR level and LFMR slope over the core sweep
+//! (Step 3):
+//!
+//! | class | temporal | AI   | MPKI | LFMR        | bottleneck          |
+//! |-------|----------|------|------|-------------|---------------------|
+//! | 1a    | low      | low  | high | high        | DRAM bandwidth      |
+//! | 1b    | low      | low  | low  | high, const | DRAM latency        |
+//! | 1c    | low      | low  | low  | decreasing  | L1/L2 capacity      |
+//! | 2a    | high     | low  | low  | increasing  | L3 contention       |
+//! | 2b    | high     | low  | low  | low/med     | L1 capacity         |
+//! | 2c    | high     | high | low  | low         | compute-bound       |
+//!
+//! Thresholds are **derived from the 44 representatives** (phase 1: the
+//! midpoint between the low-group mean and the high-group mean of each
+//! metric), then the 100 held-out variants are classified and scored
+//! against their family's ground truth (phase 2). The paper reports
+//! 0.48 / 8.5 / 11.0 / 0.56 and 97% accuracy on its corpus.
+
+use super::step3::FunctionProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    C1a,
+    C1b,
+    C1c,
+    C2a,
+    C2b,
+    C2c,
+}
+
+pub const ALL_CLASSES: [Class; 6] = [
+    Class::C1a,
+    Class::C1b,
+    Class::C1c,
+    Class::C2a,
+    Class::C2b,
+    Class::C2c,
+];
+
+impl Class {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Class::C1a => "1a",
+            Class::C1b => "1b",
+            Class::C1c => "1c",
+            Class::C2a => "2a",
+            Class::C2b => "2b",
+            Class::C2c => "2c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Class> {
+        ALL_CLASSES.iter().copied().find(|c| c.label() == s)
+    }
+
+    pub fn description(&self) -> &'static str {
+        match self {
+            Class::C1a => "DRAM bandwidth-bound",
+            Class::C1b => "DRAM latency-bound",
+            Class::C1c => "L1/L2 cache capacity-bound",
+            Class::C2a => "L3 cache contention-bound",
+            Class::C2b => "L1 cache capacity-bound",
+            Class::C2c => "compute-bound",
+        }
+    }
+}
+
+/// Classification features of one function.
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    pub temporal: f64,
+    pub ai: f64,
+    pub mpki: f64,
+    /// Mean LFMR across the host core sweep.
+    pub lfmr: f64,
+    /// LFMR(256 cores) − LFMR(1 core).
+    pub slope: f64,
+}
+
+impl Features {
+    pub fn of(p: &FunctionProfile) -> Features {
+        Features {
+            temporal: p.locality.temporal,
+            ai: p.ai,
+            mpki: p.mpki,
+            lfmr: p.lfmr_mean(),
+            slope: p.lfmr_slope(),
+        }
+    }
+}
+
+/// Data-derived decision thresholds (phase 1 of §3.5.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Thresholds {
+    pub temporal: f64,
+    pub ai: f64,
+    pub mpki: f64,
+    pub lfmr: f64,
+    /// Slope below which LFMR "decreases with core count".
+    pub slope_dec: f64,
+    /// Slope above which LFMR "increases with core count".
+    pub slope_inc: f64,
+}
+
+fn median_of(values: &[f64]) -> f64 {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::percentile_sorted(&v, 50.0)
+}
+
+/// Derive thresholds from labeled representative profiles: for each
+/// metric, the midpoint between the median over the classes defined as
+/// "low" and the median over the classes defined as "high". Bounded
+/// metrics (temporal, LFMR, slope) use the arithmetic midpoint;
+/// decade-spanning metrics (MPKI, AI) use the geometric midpoint —
+/// medians make both robust to the heavy tails of the suite.
+pub fn derive_thresholds(reps: &[(&FunctionProfile, Class)]) -> Thresholds {
+    let vals = |pred: &dyn Fn(Class) -> bool, f: &dyn Fn(&Features) -> f64| -> Vec<f64> {
+        reps.iter()
+            .filter(|(_, c)| pred(*c))
+            .map(|(p, _)| f(&Features::of(p)))
+            .collect()
+    };
+    let mid = |lo: Vec<f64>, hi: Vec<f64>| (median_of(&lo) + median_of(&hi)) / 2.0;
+    let geomid = |lo: Vec<f64>, hi: Vec<f64>| {
+        (median_of(&lo).max(1e-3) * median_of(&hi).max(1e-3)).sqrt()
+    };
+
+    use Class::*;
+    let temporal = mid(
+        vals(&|c| matches!(c, C1a | C1b | C1c), &|f| f.temporal),
+        vals(&|c| matches!(c, C2a | C2b | C2c), &|f| f.temporal),
+    );
+    let ai = geomid(
+        vals(&|c| !matches!(c, C2c), &|f| f.ai),
+        vals(&|c| matches!(c, C2c), &|f| f.ai),
+    );
+    let mpki = geomid(
+        vals(&|c| !matches!(c, C1a), &|f| f.mpki),
+        vals(&|c| matches!(c, C1a), &|f| f.mpki),
+    );
+    let lfmr = mid(
+        vals(&|c| matches!(c, C2b | C2c), &|f| f.lfmr),
+        vals(&|c| matches!(c, C1a | C1b), &|f| f.lfmr),
+    );
+    let slope_const: Vec<f64> = vals(&|c| matches!(c, C1a | C1b | C2b | C2c), &|f| f.slope);
+    let slope_dec = (median_of(&vals(&|c| matches!(c, C1c), &|f| f.slope))
+        + median_of(&slope_const))
+        / 2.0;
+    let slope_inc = (median_of(&vals(&|c| matches!(c, C2a), &|f| f.slope))
+        + median_of(&slope_const))
+        / 2.0;
+
+    Thresholds {
+        temporal,
+        ai,
+        mpki,
+        lfmr,
+        slope_dec,
+        slope_inc,
+    }
+}
+
+/// Classify one function's features (decision rules of §3.3/Fig 26).
+/// Within each temporal-locality group the LFMR *slope* is checked
+/// first: a capacity/contention signature (1c/2a) overrides the
+/// instantaneous intensity metrics measured at the reference point.
+pub fn classify(f: &Features, t: &Thresholds) -> Class {
+    if f.temporal < t.temporal {
+        // Low temporal locality: 1a / 1b / 1c.
+        if f.slope <= t.slope_dec {
+            Class::C1c
+        } else if f.mpki >= t.mpki {
+            Class::C1a
+        } else {
+            Class::C1b
+        }
+    } else {
+        // High temporal locality: 2a / 2b / 2c.
+        if f.ai >= t.ai {
+            Class::C2c
+        } else if f.slope >= t.slope_inc {
+            Class::C2a
+        } else {
+            Class::C2b
+        }
+    }
+}
+
+/// Outcome of the §3.5.1 two-phase validation.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub thresholds: Thresholds,
+    pub total: usize,
+    pub correct: usize,
+    /// (code, expected, predicted) for misclassified functions.
+    pub errors: Vec<(String, Class, Class)>,
+    /// confusion[expected][predicted] counts, indexed per `ALL_CLASSES`.
+    pub confusion: [[usize; 6]; 6],
+}
+
+impl ValidationReport {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+fn class_index(c: Class) -> usize {
+    ALL_CLASSES.iter().position(|&x| x == c).unwrap()
+}
+
+/// Phase 1 + phase 2: derive thresholds from the representatives, then
+/// classify the held-out set against family ground truth.
+pub fn validate(reps: &[FunctionProfile], holdout: &[FunctionProfile]) -> ValidationReport {
+    let labeled: Vec<(&FunctionProfile, Class)> = reps
+        .iter()
+        .filter_map(|p| p.paper_class.and_then(Class::parse).map(|c| (p, c)))
+        .collect();
+    let thresholds = derive_thresholds(&labeled);
+
+    let mut correct = 0;
+    let mut errors = Vec::new();
+    let mut confusion = [[0usize; 6]; 6];
+    for p in holdout {
+        let expected = Class::parse(p.family_class).expect("valid family class");
+        let predicted = classify(&Features::of(p), &thresholds);
+        confusion[class_index(expected)][class_index(predicted)] += 1;
+        if predicted == expected {
+            correct += 1;
+        } else {
+            errors.push((format!("{}:{}", p.code, p.input), expected, predicted));
+        }
+    }
+    ValidationReport {
+        thresholds,
+        total: holdout.len(),
+        correct,
+        errors,
+        confusion,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn thresholds() -> Thresholds {
+        Thresholds {
+            temporal: 0.48,
+            ai: 8.5,
+            mpki: 11.0,
+            lfmr: 0.56,
+            slope_dec: -0.3,
+            slope_inc: 0.3,
+        }
+    }
+
+    fn feats(temporal: f64, ai: f64, mpki: f64, lfmr: f64, slope: f64) -> Features {
+        Features {
+            temporal,
+            ai,
+            mpki,
+            lfmr,
+            slope,
+        }
+    }
+
+    #[test]
+    fn paperlike_thresholds_classify_canonical_points() {
+        let t = thresholds();
+        // STREAM-like.
+        assert_eq!(classify(&feats(0.1, 2.0, 50.0, 0.95, 0.0), &t), Class::C1a);
+        // Latency-bound.
+        assert_eq!(classify(&feats(0.2, 2.0, 5.0, 0.95, 0.0), &t), Class::C1b);
+        // L1/L2 capacity.
+        assert_eq!(classify(&feats(0.2, 2.0, 5.0, 0.5, -0.8), &t), Class::C1c);
+        // L3 contention.
+        assert_eq!(classify(&feats(0.6, 2.0, 3.0, 0.4, 0.8), &t), Class::C2a);
+        // L1 capacity.
+        assert_eq!(classify(&feats(0.6, 2.0, 3.0, 0.3, 0.0), &t), Class::C2b);
+        // Compute-bound.
+        assert_eq!(classify(&feats(0.7, 30.0, 0.5, 0.05, 0.0), &t), Class::C2c);
+    }
+
+    #[test]
+    fn class_labels_roundtrip() {
+        for c in ALL_CLASSES {
+            assert_eq!(Class::parse(c.label()), Some(c));
+        }
+        assert_eq!(Class::parse("3z"), None);
+    }
+
+    #[test]
+    fn boundary_cases_are_deterministic() {
+        let t = thresholds();
+        // Exactly at the MPKI threshold counts as high (>=).
+        assert_eq!(classify(&feats(0.1, 2.0, 11.0, 0.9, 0.0), &t), Class::C1a);
+        // Exactly at the AI threshold counts as high.
+        assert_eq!(classify(&feats(0.6, 8.5, 1.0, 0.1, 0.0), &t), Class::C2c);
+    }
+}

@@ -1,0 +1,255 @@
+//! Clustering for Step 2 (Fig 3: K-means over spatial×temporal locality)
+//! and §4.1 (Fig 19: hierarchical clustering over the five
+//! classification features with Euclidean linkage).
+//!
+//! A pure-Rust implementation lives here (used by tests, reports and as
+//! the `--no-artifacts` fallback); the k-means assignment step is also
+//! compiled as a Pallas/JAX artifact and executed through PJRT by the
+//! runtime — `runtime::analytics` cross-checks the two.
+
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::euclidean;
+
+/// K-means (Lloyd) with deterministic seeding. Returns (assignments,
+/// centroids). Points are row vectors.
+pub fn kmeans(points: &[Vec<f64>], k: usize, iters: usize, seed: u64) -> (Vec<usize>, Vec<Vec<f64>>) {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let dims = points[0].len();
+    let mut rng = Xoshiro256::new(seed);
+
+    // k-means++-style greedy init: first centroid random, then farthest.
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.gen_usize(0, points.len())].clone());
+    while centroids.len() < k {
+        let far = points
+            .iter()
+            .max_by(|a, b| {
+                let da = centroids.iter().map(|c| euclidean(a, c)).fold(f64::MAX, f64::min);
+                let db = centroids.iter().map(|c| euclidean(b, c)).fold(f64::MAX, f64::min);
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap();
+        centroids.push(far.clone());
+    }
+
+    let mut assign = vec![0usize; points.len()];
+    for _ in 0..iters {
+        // Assignment step (this is the step the Pallas artifact computes).
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    euclidean(p, &centroids[a])
+                        .partial_cmp(&euclidean(p, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        // Update step.
+        let mut sums = vec![vec![0.0; dims]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for d in 0..dims {
+                sums[assign[i]][d] += p[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..dims {
+                    centroids[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    (assign, centroids)
+}
+
+/// One k-means assignment step (the exact computation of the PJRT
+/// artifact): nearest centroid per point.
+pub fn kmeans_assign(points: &[Vec<f64>], centroids: &[Vec<f64>]) -> Vec<usize> {
+    points
+        .iter()
+        .map(|p| {
+            (0..centroids.len())
+                .min_by(|&a, &b| {
+                    euclidean(p, &centroids[a])
+                        .partial_cmp(&euclidean(p, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+/// A merge step in the agglomerative dendrogram: clusters `a` and `b`
+/// (node ids; leaves are 0..n, internal nodes continue upward) merge at
+/// `distance` into node `id`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Merge {
+    pub id: usize,
+    pub a: usize,
+    pub b: usize,
+    pub distance: f64,
+    pub size: usize,
+}
+
+/// Average-linkage agglomerative clustering (as Fig 19). Returns the
+/// n−1 merges in order of increasing linkage distance.
+pub fn hierarchical(points: &[Vec<f64>]) -> Vec<Merge> {
+    let n = points.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    // Active clusters: (node id, member point indices).
+    let mut clusters: Vec<(usize, Vec<usize>)> = (0..n).map(|i| (i, vec![i])).collect();
+    let mut merges = Vec::with_capacity(n - 1);
+    let mut next_id = n;
+    while clusters.len() > 1 {
+        // Find the closest pair by average linkage.
+        let mut best = (0usize, 1usize, f64::MAX);
+        for i in 0..clusters.len() {
+            for j in (i + 1)..clusters.len() {
+                let mut sum = 0.0;
+                for &p in &clusters[i].1 {
+                    for &q in &clusters[j].1 {
+                        sum += euclidean(&points[p], &points[q]);
+                    }
+                }
+                let d = sum / (clusters[i].1.len() * clusters[j].1.len()) as f64;
+                if d < best.2 {
+                    best = (i, j, d);
+                }
+            }
+        }
+        let (i, j, d) = best;
+        let (id_b, members_b) = clusters.remove(j);
+        let (id_a, members_a) = clusters.remove(i);
+        let mut members = members_a;
+        members.extend(members_b);
+        merges.push(Merge {
+            id: next_id,
+            a: id_a,
+            b: id_b,
+            distance: d,
+            size: members.len(),
+        });
+        clusters.push((next_id, members));
+        next_id += 1;
+    }
+    merges
+}
+
+/// Render a text dendrogram (Fig 19) with leaf labels.
+pub fn render_dendrogram(labels: &[String], merges: &[Merge]) -> String {
+    let n = labels.len();
+    // Reconstruct member lists per node id.
+    let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    for m in merges {
+        let mut v = members[m.a].clone();
+        v.extend(members[m.b].clone());
+        members.push(v);
+    }
+    let mut out = String::new();
+    for m in merges {
+        let list = |node: usize| -> String {
+            let mut ls: Vec<&str> = members[node].iter().map(|&i| labels[i].as_str()).collect();
+            ls.sort_unstable();
+            if ls.len() > 6 {
+                format!("[{} … +{}]", ls[..6].join(", "), ls.len() - 6)
+            } else {
+                format!("[{}]", ls.join(", "))
+            }
+        };
+        out.push_str(&format!(
+            "d={:6.3}  {} + {}\n",
+            m.distance,
+            list(m.a),
+            list(m.b)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs() -> Vec<Vec<f64>> {
+        let mut pts = Vec::new();
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..20 {
+            pts.push(vec![rng.gen_f64() * 0.1, rng.gen_f64() * 0.1]);
+        }
+        for _ in 0..20 {
+            pts.push(vec![0.9 + rng.gen_f64() * 0.1, 0.9 + rng.gen_f64() * 0.1]);
+        }
+        pts
+    }
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let pts = two_blobs();
+        let (assign, centroids) = kmeans(&pts, 2, 50, 1);
+        assert_eq!(centroids.len(), 2);
+        // All of the first 20 share a label; all of the last 20 the other.
+        assert!(assign[..20].iter().all(|&a| a == assign[0]));
+        assert!(assign[20..].iter().all(|&a| a == assign[20]));
+        assert_ne!(assign[0], assign[20]);
+    }
+
+    #[test]
+    fn kmeans_deterministic() {
+        let pts = two_blobs();
+        assert_eq!(kmeans(&pts, 2, 50, 9).0, kmeans(&pts, 2, 50, 9).0);
+    }
+
+    #[test]
+    fn assign_matches_full_kmeans_fixedpoint() {
+        let pts = two_blobs();
+        let (assign, centroids) = kmeans(&pts, 2, 50, 1);
+        assert_eq!(kmeans_assign(&pts, &centroids), assign);
+    }
+
+    #[test]
+    fn hierarchical_merges_blobs_last() {
+        let pts = two_blobs();
+        let merges = hierarchical(&pts);
+        assert_eq!(merges.len(), pts.len() - 1);
+        // The final merge bridges the two blobs: by far the largest gap.
+        let last = merges.last().unwrap();
+        let prev = &merges[merges.len() - 2];
+        assert!(last.distance > 3.0 * prev.distance, "last={} prev={}", last.distance, prev.distance);
+        assert_eq!(last.size, pts.len());
+        // Distances non-decreasing-ish (average linkage is monotone here).
+        for w in merges.windows(2) {
+            assert!(w[1].distance >= w[0].distance - 1e-9);
+        }
+    }
+
+    #[test]
+    fn dendrogram_renders_all_merges() {
+        let pts = vec![vec![0.0], vec![0.1], vec![5.0]];
+        let merges = hierarchical(&pts);
+        let labels = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let txt = render_dendrogram(&labels, &merges);
+        assert_eq!(txt.lines().count(), 2);
+        assert!(txt.contains("[a]") || txt.contains("[a, b]"));
+    }
+
+    #[test]
+    fn kmeans_k_larger_than_points() {
+        let pts = vec![vec![0.0], vec![1.0]];
+        let (assign, centroids) = kmeans(&pts, 5, 10, 3);
+        assert_eq!(centroids.len(), 2);
+        assert_eq!(assign.len(), 2);
+    }
+}

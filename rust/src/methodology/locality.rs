@@ -1,0 +1,325 @@
+//! Step 2: architecture-independent spatial/temporal locality metrics
+//! (paper §2.3, Eqs. 1–2; definitions after Weinberg et al. / Shao &
+//! Brooks), computed at **word granularity** over the function's
+//! single-thread trace.
+//!
+//! The trace is split into non-overlapping windows of W = L = 32 word
+//! addresses:
+//!
+//! * **Spatial** (Eq. 1): per window, the minimum non-zero distance
+//!   between any two addresses (`stride`); the metric is the mean over
+//!   windows of `1/stride` (a window with no two distinct addresses
+//!   contributes 0). Fully sequential word accesses → 1; large or random
+//!   strides → ~0.
+//! * **Temporal** (Eq. 2): per window, each address appearing k ≥ 2
+//!   times contributes `2^floor(log2 k)`; the metric is the summed
+//!   contribution divided by total accesses. A single address repeated
+//!   forever → 1; all-unique addresses → 0.
+//!
+//! This module is the **reference implementation and oracle** for the
+//! AOT-compiled Pallas kernel (`python/compile/kernels/locality.py`); the
+//! runtime cross-checks both paths (see `runtime::analytics`). The exact
+//! same windowed formulation is used on both sides so results match to
+//! floating-point rounding.
+
+use crate::sim::Access;
+
+pub const WINDOW: usize = 32;
+
+/// Spatial/temporal locality of one function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LocalityMetrics {
+    pub spatial: f64,
+    pub temporal: f64,
+    /// Number of full windows analyzed.
+    pub windows: usize,
+}
+
+/// Convert a trace to word addresses (8-byte words, §2.3 footnote 5).
+pub fn word_trace(trace: &[Access]) -> Vec<u64> {
+    trace.iter().map(|a| a.addr >> 3).collect()
+}
+
+/// Per-window spatial contribution: 1 / min non-zero pairwise distance,
+/// or 0 if all addresses are identical.
+pub fn window_spatial(window: &[u64]) -> f64 {
+    debug_assert!(window.len() >= 2);
+    let mut min_stride = u64::MAX;
+    for i in 0..window.len() {
+        for j in (i + 1)..window.len() {
+            let d = window[i].abs_diff(window[j]);
+            if d > 0 && d < min_stride {
+                min_stride = d;
+            }
+        }
+    }
+    if min_stride == u64::MAX {
+        0.0
+    } else {
+        1.0 / min_stride as f64
+    }
+}
+
+/// Per-window temporal contribution: Σ over positions of
+/// `[k_i >= 2] * 2^floor(log2 k_i) / k_i`, where `k_i` is the number of
+/// occurrences of the address at position i within the window. (Each
+/// unique address thus contributes `2^floor(log2 k)` once, matching the
+/// reuse-profile formulation; dividing by window length outside yields
+/// Eq. 2.)
+pub fn window_temporal(window: &[u64]) -> f64 {
+    let n = window.len();
+    let mut total = 0.0;
+    for i in 0..n {
+        let mut k = 0u32;
+        for j in 0..n {
+            if window[j] == window[i] {
+                k += 1;
+            }
+        }
+        if k >= 2 {
+            let bin = 31 - k.leading_zeros(); // floor(log2 k)
+            total += (1u64 << bin) as f64 / k as f64;
+        }
+    }
+    total
+}
+
+/// Compute both metrics over a word-address stream.
+///
+/// Hot path: instead of the O(W²) pairwise scans (kept above as the
+/// definitional forms, and mirrored by the Pallas kernel where the
+/// broadcast compare *is* the natural vector shape), each window is
+/// sorted once — the min non-zero pairwise distance is the min non-zero
+/// adjacent difference of the sorted window, and occurrence counts are
+/// its run lengths. Exactly equivalent, ~3x faster in scalar code.
+pub fn locality_of_words(words: &[u64]) -> LocalityMetrics {
+    let windows = words.len() / WINDOW;
+    if windows == 0 {
+        return LocalityMetrics {
+            spatial: 0.0,
+            temporal: 0.0,
+            windows: 0,
+        };
+    }
+    let mut spatial_sum = 0.0;
+    let mut temporal_sum = 0.0;
+    let mut buf = [0u64; WINDOW];
+    for w in 0..windows {
+        buf.copy_from_slice(&words[w * WINDOW..(w + 1) * WINDOW]);
+        buf.sort_unstable();
+        let mut min_stride = u64::MAX;
+        let mut run = 1u32;
+        for i in 1..WINDOW {
+            let d = buf[i] - buf[i - 1];
+            if d == 0 {
+                run += 1;
+            } else {
+                if d < min_stride {
+                    min_stride = d;
+                }
+                if run >= 2 {
+                    temporal_sum += (1u64 << (31 - run.leading_zeros())) as f64;
+                }
+                run = 1;
+            }
+        }
+        if run >= 2 {
+            temporal_sum += (1u64 << (31 - run.leading_zeros())) as f64;
+        }
+        if min_stride != u64::MAX {
+            spatial_sum += 1.0 / min_stride as f64;
+        }
+    }
+    LocalityMetrics {
+        spatial: (spatial_sum / windows as f64).min(1.0),
+        temporal: (temporal_sum / (windows * WINDOW) as f64).min(1.0),
+        windows,
+    }
+}
+
+/// Definitional (O(W²)) implementation retained as a cross-check oracle
+/// for the sorted fast path.
+pub fn locality_of_words_reference(words: &[u64]) -> LocalityMetrics {
+    let windows = words.len() / WINDOW;
+    if windows == 0 {
+        return LocalityMetrics {
+            spatial: 0.0,
+            temporal: 0.0,
+            windows: 0,
+        };
+    }
+    let mut spatial_sum = 0.0;
+    let mut temporal_sum = 0.0;
+    for w in 0..windows {
+        let win = &words[w * WINDOW..(w + 1) * WINDOW];
+        spatial_sum += window_spatial(win);
+        temporal_sum += window_temporal(win);
+    }
+    LocalityMetrics {
+        spatial: (spatial_sum / windows as f64).min(1.0),
+        temporal: (temporal_sum / (windows * WINDOW) as f64).min(1.0),
+        windows,
+    }
+}
+
+/// Compute both metrics for an access trace.
+pub fn locality(trace: &[Access]) -> LocalityMetrics {
+    locality_of_words(&word_trace(trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn words_to_accesses(words: &[u64]) -> Vec<Access> {
+        words.iter().map(|&w| Access::load(w * 8, 0, 0)).collect()
+    }
+
+    #[test]
+    fn sequential_words_spatial_one() {
+        let words: Vec<u64> = (0..320).collect();
+        let m = locality_of_words(&words);
+        assert!((m.spatial - 1.0).abs() < 1e-12, "spatial={}", m.spatial);
+        assert_eq!(m.temporal, 0.0);
+    }
+
+    #[test]
+    fn single_address_temporal_one() {
+        let words = vec![42u64; 320];
+        let m = locality_of_words(&words);
+        // k = 32 per window: 2^5 / 32 = 1.0 exactly.
+        assert!((m.temporal - 1.0).abs() < 1e-12, "temporal={}", m.temporal);
+        assert_eq!(m.spatial, 0.0); // no two distinct addresses
+    }
+
+    #[test]
+    fn random_trace_low_both() {
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let words: Vec<u64> = (0..3200).map(|_| rng.gen_range(1 << 40)).collect();
+        let m = locality_of_words(&words);
+        assert!(m.spatial < 0.05, "spatial={}", m.spatial);
+        assert!(m.temporal < 0.05, "temporal={}", m.temporal);
+    }
+
+    #[test]
+    fn strided_access_spatial_inverse_stride() {
+        let words: Vec<u64> = (0..320).map(|i| i * 4).collect();
+        let m = locality_of_words(&words);
+        assert!((m.spatial - 0.25).abs() < 1e-12, "spatial={}", m.spatial);
+    }
+
+    #[test]
+    fn alternating_pair_temporal_one() {
+        let words: Vec<u64> = (0..320).map(|i| (i % 2) as u64).collect();
+        let m = locality_of_words(&words);
+        // Each window: 2 addresses x k=16 -> 2 * 2^4 = 32; /32 = 1.0.
+        assert!((m.temporal - 1.0).abs() < 1e-12, "temporal={}", m.temporal);
+        // min distinct stride = 1.
+        assert!((m.spatial - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmw_triplets_intermediate_temporal() {
+        // load,load,store to each word (k=3 within window mostly).
+        let mut words = Vec::new();
+        for i in 0..400u64 {
+            words.extend_from_slice(&[i, i, i]);
+        }
+        let m = locality_of_words(&words);
+        // Triples: 2^1/3*3 per address = 2 per address; ~10.67 addr/window
+        // -> ~21/32 = 0.66 (boundary effects shift it slightly).
+        assert!((0.5..0.8).contains(&m.temporal), "temporal={}", m.temporal);
+        assert!(m.spatial > 0.9); // adjacent words present
+    }
+
+    #[test]
+    fn partial_window_ignored() {
+        let words: Vec<u64> = (0..40).collect(); // 1 full window + 8 extra
+        let m = locality_of_words(&words);
+        assert_eq!(m.windows, 1);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let m = locality_of_words(&[]);
+        assert_eq!(m.windows, 0);
+        assert_eq!(m.spatial, 0.0);
+    }
+
+    #[test]
+    fn trace_api_uses_word_granularity() {
+        // Byte addresses 0,8,16.. = words 0,1,2..
+        let accesses = words_to_accesses(&(0..64).collect::<Vec<u64>>());
+        let m = locality(&accesses);
+        assert!((m.spatial - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suite_classes_separate_in_temporal() {
+        use crate::workloads::{registry, Scale};
+        // STREAM (1a) must be low-temporal; GramSch (2a) high-temporal.
+        let stream = registry::by_code("STRTriad").unwrap();
+        let gram = registry::by_code("PLYGramSch").unwrap();
+        let mt_stream = locality(&stream.locality_trace(Scale::tiny()));
+        let mt_gram = locality(&gram.locality_trace(Scale::tiny()));
+        assert!(
+            mt_gram.temporal > mt_stream.temporal + 0.3,
+            "gram={} stream={}",
+            mt_gram.temporal,
+            mt_stream.temporal
+        );
+        assert!(mt_stream.spatial > 0.5, "stream spatial={}", mt_stream.spatial);
+    }
+
+    #[test]
+    fn fast_path_matches_definitional_form() {
+        crate::util::prop::check(60, |rng| {
+            let kind = rng.gen_usize(0, 4);
+            let n = rng.gen_usize(32, 400);
+            let words: Vec<u64> = match kind {
+                0 => (0..n).map(|_| rng.gen_range(1 << 40)).collect(),
+                1 => (0..n as u64).collect(),
+                2 => (0..n).map(|_| rng.gen_range(8)).collect(), // heavy repeats
+                _ => (0..n as u64).map(|i| i * rng.gen_range(100).max(1)).collect(),
+            };
+            let fast = locality_of_words(&words);
+            let slow = locality_of_words_reference(&words);
+            assert!((fast.spatial - slow.spatial).abs() < 1e-12);
+            assert!((fast.temporal - slow.temporal).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn property_metrics_bounded() {
+        crate::util::prop::check(50, |rng| {
+            let n = rng.gen_usize(0, 500);
+            let words: Vec<u64> = (0..n).map(|_| rng.gen_range(1 << 20)).collect();
+            let m = locality_of_words(&words);
+            assert!((0.0..=1.0).contains(&m.spatial));
+            assert!((0.0..=1.0).contains(&m.temporal));
+        });
+    }
+
+    #[test]
+    fn property_permuting_windows_preserves_metrics() {
+        // Metrics are window-local: shuffling whole windows changes nothing.
+        crate::util::prop::check(20, |rng| {
+            let n_win = rng.gen_usize(2, 20);
+            let mut words = Vec::new();
+            for _ in 0..n_win * WINDOW {
+                words.push(rng.gen_range(1000));
+            }
+            let base = locality_of_words(&words);
+            // Swap two whole windows.
+            let a = rng.gen_usize(0, n_win);
+            let b = rng.gen_usize(0, n_win);
+            let mut swapped = words.clone();
+            for k in 0..WINDOW {
+                swapped.swap(a * WINDOW + k, b * WINDOW + k);
+            }
+            let after = locality_of_words(&swapped);
+            assert!((base.spatial - after.spatial).abs() < 1e-12);
+            assert!((base.temporal - after.temporal).abs() < 1e-12);
+        });
+    }
+}

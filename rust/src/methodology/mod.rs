@@ -1,0 +1,23 @@
+//! The paper's contribution: the three-step workload characterization
+//! methodology (§2) and the six-class memory-bottleneck model (§3).
+//!
+//! * [`step1`] — memory-bound function identification via top-down
+//!   "Memory Bound %" on the simulated host (substitutes VTune).
+//! * [`locality`] — Step 2's architecture-independent spatial/temporal
+//!   locality metrics (word granularity, 32-reference windows).
+//! * [`step3`] — the scalability analysis: three systems × the core
+//!   sweep, yielding per-function [`step3::FunctionProfile`]s.
+//! * [`classify`] — bottleneck classification: data-derived thresholds
+//!   (§3.5.1 phase 1) + the six-class decision rules, and the held-out
+//!   validation (§3.5.1 phase 2).
+//! * [`cluster`] — K-means (Fig 3) and hierarchical clustering (Fig 19).
+
+pub mod classify;
+pub mod cluster;
+pub mod locality;
+pub mod step1;
+pub mod step3;
+
+pub use classify::{Class, Thresholds};
+pub use locality::{locality, LocalityMetrics};
+pub use step3::FunctionProfile;

@@ -1,0 +1,74 @@
+//! Step 1: memory-bound function identification (paper §2.2, §3.1).
+//!
+//! The paper profiles 345 applications with Intel VTune's top-down
+//! analysis on a 4-core Xeon and keeps functions with `Memory Bound`
+//! > 30% (and ≥ 3% of application cycles). Our substitute computes the
+//! same metric — the fraction of pipeline slots lost to data-access
+//! stalls — from the simulator's own accounting on the equivalent
+//! 4-core host configuration (DESIGN.md §1, substitution S8).
+
+use crate::sim::{simulate, CoreModel, SystemConfig};
+use crate::workloads::{FunctionSpec, Scale};
+
+/// The paper's Memory Bound threshold.
+pub const MEMORY_BOUND_THRESHOLD: f64 = 0.30;
+
+/// Step-1 verdict for one function.
+#[derive(Debug, Clone)]
+pub struct Step1Result {
+    pub code: String,
+    pub memory_bound: f64,
+    pub selected: bool,
+}
+
+/// Profile one function on the 4-core host and apply the 30% filter.
+pub fn identify(spec: &FunctionSpec, scale: Scale) -> Step1Result {
+    let cfg = SystemConfig::host(4, CoreModel::OutOfOrder);
+    let r = simulate(&cfg, &spec.trace(4, scale));
+    Step1Result {
+        code: spec.id.code(),
+        memory_bound: r.memory_bound,
+        selected: r.memory_bound > MEMORY_BOUND_THRESHOLD,
+    }
+}
+
+/// Run Step 1 over a set of functions, returning those selected.
+pub fn filter_memory_bound(specs: &[FunctionSpec], scale: Scale, threads: usize) -> Vec<Step1Result> {
+    crate::util::pool::par_map(specs, threads, |s| identify(s, scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::registry;
+
+    #[test]
+    fn stream_is_selected() {
+        let spec = registry::by_code("STRTriad").unwrap();
+        let r = identify(&spec, Scale(0.3));
+        assert!(r.selected, "memory_bound={}", r.memory_bound);
+    }
+
+    #[test]
+    fn chase_is_strongly_selected() {
+        let spec = registry::by_code("PLYalu").unwrap();
+        let r = identify(&spec, Scale(0.3));
+        assert!(r.memory_bound > 0.5, "memory_bound={}", r.memory_bound);
+    }
+
+    #[test]
+    fn all_suite_functions_pass_step1() {
+        // The DAMOV suite is by construction the memory-bound subset —
+        // every representative must clear the 30% filter.
+        let reps = registry::representatives();
+        let results = filter_memory_bound(&reps, Scale(0.15), 8);
+        for r in &results {
+            assert!(
+                r.memory_bound > MEMORY_BOUND_THRESHOLD,
+                "{} has memory_bound={:.2}",
+                r.code,
+                r.memory_bound
+            );
+        }
+    }
+}

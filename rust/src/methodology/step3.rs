@@ -1,0 +1,243 @@
+//! Step 3: scalability analysis (paper §2.4).
+//!
+//! For each function we simulate the three system configurations (host,
+//! host+prefetcher, NDP) across the 1–256 core sweep (and optionally the
+//! §3.4 NUCA host and the in-order core model), and collect the
+//! classification metrics — AI, LLC MPKI, LFMR (+ its slope over the
+//! sweep) — plus everything the report harness needs (energy breakdowns,
+//! AMAT, request breakdowns, bandwidth, NoC statistics).
+
+use super::locality::{locality, LocalityMetrics};
+use crate::sim::{simulate, CoreModel, SimResult, SystemConfig, SystemKind, CORE_SWEEP};
+use crate::util::pool::par_map;
+use crate::workloads::{FunctionSpec, Scale};
+
+/// One simulated (system, core-model, cores) point.
+#[derive(Debug, Clone)]
+pub struct Run {
+    pub kind: SystemKind,
+    pub core_model: CoreModel,
+    pub cores: usize,
+    pub result: SimResult,
+}
+
+/// Complete characterization of one function.
+#[derive(Debug, Clone)]
+pub struct FunctionProfile {
+    pub code: String,
+    pub input: String,
+    pub suite: String,
+    pub paper_class: Option<&'static str>,
+    pub family_class: &'static str,
+    pub representative: bool,
+    pub locality: LocalityMetrics,
+    /// Reference metrics: host, out-of-order, 4 cores (the Step-1 box).
+    pub ai: f64,
+    pub mpki: f64,
+    pub lfmr: f64,
+    pub memory_bound: f64,
+    /// LFMR on the host across `CORE_SWEEP`.
+    pub lfmr_by_cores: Vec<f64>,
+    pub runs: Vec<Run>,
+}
+
+impl FunctionProfile {
+    pub fn run(&self, kind: SystemKind, core_model: CoreModel, cores: usize) -> Option<&Run> {
+        self.runs
+            .iter()
+            .find(|r| r.kind == kind && r.core_model == core_model && r.cores == cores)
+    }
+
+    /// Performance normalized to one host core (same core model).
+    pub fn norm_perf(&self, kind: SystemKind, core_model: CoreModel, cores: usize) -> f64 {
+        let base = self
+            .run(SystemKind::Host, core_model, 1)
+            .map(|r| r.result.perf())
+            .unwrap_or(1.0);
+        self.run(kind, core_model, cores)
+            .map(|r| r.result.perf() / base)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// NDP speedup over the host at the same core count.
+    pub fn ndp_speedup(&self, core_model: CoreModel, cores: usize) -> f64 {
+        let host = self
+            .run(SystemKind::Host, core_model, cores)
+            .map(|r| r.result.perf());
+        let ndp = self
+            .run(SystemKind::Ndp, core_model, cores)
+            .map(|r| r.result.perf());
+        match (host, ndp) {
+            (Some(h), Some(n)) if h > 0.0 => n / h,
+            _ => f64::NAN,
+        }
+    }
+
+    /// LFMR slope proxy: LFMR(max cores) − LFMR(1 core) on the host.
+    pub fn lfmr_slope(&self) -> f64 {
+        match (self.lfmr_by_cores.first(), self.lfmr_by_cores.last()) {
+            (Some(a), Some(b)) => b - a,
+            _ => 0.0,
+        }
+    }
+
+    /// Mean LFMR across the sweep (the "level" feature).
+    pub fn lfmr_mean(&self) -> f64 {
+        if self.lfmr_by_cores.is_empty() {
+            return self.lfmr;
+        }
+        self.lfmr_by_cores.iter().sum::<f64>() / self.lfmr_by_cores.len() as f64
+    }
+}
+
+/// What to simulate for a profile.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepOptions {
+    pub core_models: &'static [CoreModel],
+    /// Include the §3.4 NUCA host configuration.
+    pub nuca: bool,
+    pub scale: Scale,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            core_models: &[CoreModel::OutOfOrder],
+            nuca: false,
+            scale: Scale(1.0),
+        }
+    }
+}
+
+/// Simulate every (system, model, cores) point for one function.
+pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfile {
+    let loc = locality(&spec.locality_trace(opt.scale));
+    let mut kinds = vec![SystemKind::Host, SystemKind::HostPrefetch, SystemKind::Ndp];
+    if opt.nuca {
+        kinds.push(SystemKind::HostNuca);
+    }
+    // Iterate core counts outermost so each trace is generated exactly
+    // once and shared (borrowed, not cloned) by every system/model run.
+    let mut runs = Vec::with_capacity(opt.core_models.len() * kinds.len() * CORE_SWEEP.len());
+    for &cores in CORE_SWEEP.iter() {
+        let trace = spec.trace(cores, opt.scale);
+        for &model in opt.core_models {
+            for &kind in &kinds {
+                let cfg = SystemConfig::by_kind(kind, cores, model);
+                let result = simulate(&cfg, &trace);
+                runs.push(Run {
+                    kind,
+                    core_model: model,
+                    cores,
+                    result,
+                });
+            }
+        }
+    }
+
+    let refrun = runs
+        .iter()
+        .find(|r| {
+            r.kind == SystemKind::Host && r.core_model == CoreModel::OutOfOrder && r.cores == 4
+        })
+        .or_else(|| runs.iter().find(|r| r.kind == SystemKind::Host && r.cores == 4))
+        .expect("host@4 reference run");
+    let lfmr_by_cores: Vec<f64> = CORE_SWEEP
+        .iter()
+        .filter_map(|&c| {
+            runs.iter()
+                .find(|r| {
+                    r.kind == SystemKind::Host && r.core_model == opt.core_models[0] && r.cores == c
+                })
+                .map(|r| r.result.lfmr)
+        })
+        .collect();
+
+    FunctionProfile {
+        code: spec.id.code(),
+        input: spec.id.input.clone(),
+        suite: spec.id.suite.to_string(),
+        paper_class: spec.paper_class,
+        family_class: spec.family_class,
+        representative: spec.representative,
+        locality: loc,
+        ai: refrun.result.ai,
+        mpki: refrun.result.mpki,
+        lfmr: refrun.result.lfmr,
+        memory_bound: refrun.result.memory_bound,
+        lfmr_by_cores,
+        runs,
+    }
+}
+
+/// Profile many functions in parallel.
+pub fn profile_all(
+    specs: &[FunctionSpec],
+    opt: SweepOptions,
+    threads: usize,
+) -> Vec<FunctionProfile> {
+    par_map(specs, threads, |s| profile_function(s, opt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::registry;
+
+    fn profile_at(code: &str, scale: f64) -> FunctionProfile {
+        let spec = registry::by_code(code).unwrap();
+        profile_function(
+            &spec,
+            SweepOptions {
+                scale: Scale(scale),
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Class shapes are defined against the fixed Table-1 cache sizes, so
+    /// shape assertions need full-size workloads.
+    fn full_profile(code: &str) -> FunctionProfile {
+        profile_at(code, 1.0)
+    }
+
+    fn tiny_profile(code: &str) -> FunctionProfile {
+        profile_at(code, 0.1)
+    }
+
+    #[test]
+    fn stream_profile_is_1a_shaped() {
+        let p = full_profile("STRTriad");
+        assert!(p.locality.temporal < 0.3);
+        assert!(p.mpki > 10.0, "mpki={}", p.mpki);
+        assert!(p.lfmr_mean() > 0.5, "lfmr={}", p.lfmr_mean());
+        // NDP wins at high core counts.
+        let s = p.ndp_speedup(CoreModel::OutOfOrder, 64);
+        assert!(s > 1.2, "ndp speedup={s}");
+    }
+
+    #[test]
+    fn compute_profile_is_2c_shaped() {
+        let p = full_profile("PLY3mm");
+        assert!(p.locality.temporal > 0.4, "temporal={}", p.locality.temporal);
+        assert!(p.ai > 8.0, "ai={}", p.ai);
+        let s = p.ndp_speedup(CoreModel::OutOfOrder, 4);
+        assert!(s < 1.0, "ndp speedup={s}");
+    }
+
+    #[test]
+    fn profile_contains_full_sweep() {
+        let p = tiny_profile("CHAHsti");
+        // 3 systems x 5 core counts.
+        assert_eq!(p.runs.len(), 15);
+        assert_eq!(p.lfmr_by_cores.len(), 5);
+        assert!(p.run(SystemKind::Ndp, CoreModel::OutOfOrder, 256).is_some());
+    }
+
+    #[test]
+    fn norm_perf_baseline_is_one() {
+        let p = tiny_profile("STRCpy");
+        let base = p.norm_perf(SystemKind::Host, CoreModel::OutOfOrder, 1);
+        assert!((base - 1.0).abs() < 1e-12);
+    }
+}

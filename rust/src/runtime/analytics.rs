@@ -1,0 +1,166 @@
+//! High-level analytics over the PJRT artifacts: locality metrics and
+//! k-means, with the pure-Rust implementations as cross-check oracles.
+//!
+//! Shapes are fixed at AOT time (python/compile/model.py):
+//! * locality: (4096, 32) f64 windows + (4096,) f64 mask →
+//!   (spatial_sum, temporal_sum, n_valid) f64 scalars. Longer traces are
+//!   streamed through in chunks; the tail is zero-padded and masked out.
+//! * kmeans: (64, 8) f32 points + (8, 8) f32 centroids + (64,) f32 mask
+//!   → ((64,) i32 assignments, (8, 8) f32 new centroids). Rust iterates
+//!   Lloyd steps to a fixed point.
+
+use super::artifact::{Artifact, PjrtContext};
+use crate::methodology::locality::{LocalityMetrics, WINDOW};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub const CHUNK_WINDOWS: usize = 4096;
+pub const KM_POINTS: usize = 64;
+pub const KM_CENTROIDS: usize = 8;
+pub const KM_FEATURES: usize = 8;
+
+pub struct Analytics {
+    #[allow(dead_code)]
+    ctx: PjrtContext,
+    locality: Artifact,
+    kmeans: Artifact,
+}
+
+impl Analytics {
+    pub fn load(dir: &Path) -> Result<Analytics> {
+        let ctx = PjrtContext::cpu()?;
+        let locality = Artifact::load(&ctx, dir, "locality")?;
+        let kmeans = Artifact::load(&ctx, dir, "kmeans")?;
+        Ok(Analytics {
+            ctx,
+            locality,
+            kmeans,
+        })
+    }
+
+    /// Locality metrics of a word-address stream via the Pallas artifact.
+    pub fn locality_of_words(&self, words: &[u64]) -> Result<LocalityMetrics> {
+        let n_windows = words.len() / WINDOW;
+        if n_windows == 0 {
+            return Ok(LocalityMetrics {
+                spatial: 0.0,
+                temporal: 0.0,
+                windows: 0,
+            });
+        }
+        let mut spatial_sum = 0.0;
+        let mut temporal_sum = 0.0;
+        let mut done = 0usize;
+        while done < n_windows {
+            let take = (n_windows - done).min(CHUNK_WINDOWS);
+            let mut buf = vec![0.0f64; CHUNK_WINDOWS * WINDOW];
+            let mut mask = vec![0.0f64; CHUNK_WINDOWS];
+            for w in 0..take {
+                mask[w] = 1.0;
+                for k in 0..WINDOW {
+                    buf[w * WINDOW + k] = words[(done + w) * WINDOW + k] as f64;
+                }
+            }
+            let windows_lit = xla::Literal::vec1(&buf)
+                .reshape(&[CHUNK_WINDOWS as i64, WINDOW as i64])
+                .context("reshaping window literal")?;
+            let mask_lit = xla::Literal::vec1(&mask);
+            let out = self.locality.run(&[windows_lit, mask_lit])?;
+            anyhow::ensure!(out.len() == 3, "locality artifact returned {}", out.len());
+            spatial_sum += out[0].to_vec::<f64>()?[0];
+            temporal_sum += out[1].to_vec::<f64>()?[0];
+            done += take;
+        }
+        Ok(LocalityMetrics {
+            spatial: (spatial_sum / n_windows as f64).min(1.0),
+            temporal: (temporal_sum / (n_windows * WINDOW) as f64).min(1.0),
+            windows: n_windows,
+        })
+    }
+
+    /// Locality metrics of an access trace.
+    pub fn locality(&self, trace: &[crate::sim::Access]) -> Result<LocalityMetrics> {
+        self.locality_of_words(&crate::methodology::locality::word_trace(trace))
+    }
+
+    /// One k-means Lloyd iteration through the artifact. `points` is
+    /// (n ≤ 64) × (f ≤ 8); extra slots are masked out / zero-padded.
+    pub fn kmeans_step(
+        &self,
+        points: &[Vec<f64>],
+        centroids: &[Vec<f64>],
+    ) -> Result<(Vec<usize>, Vec<Vec<f64>>)> {
+        let n = points.len();
+        let k = centroids.len();
+        anyhow::ensure!(n <= KM_POINTS, "too many points: {n}");
+        anyhow::ensure!(k <= KM_CENTROIDS, "too many centroids: {k}");
+        let f = points.first().map(|p| p.len()).unwrap_or(0);
+        anyhow::ensure!(f <= KM_FEATURES, "too many features: {f}");
+
+        let mut pts = vec![0.0f32; KM_POINTS * KM_FEATURES];
+        let mut mask = vec![0.0f32; KM_POINTS];
+        for (i, p) in points.iter().enumerate() {
+            mask[i] = 1.0;
+            for (d, &v) in p.iter().enumerate() {
+                pts[i * KM_FEATURES + d] = v as f32;
+            }
+        }
+        let mut cent = vec![0.0f32; KM_CENTROIDS * KM_FEATURES];
+        for (c, row) in centroids.iter().enumerate() {
+            for (d, &v) in row.iter().enumerate() {
+                cent[c * KM_FEATURES + d] = v as f32;
+            }
+        }
+        // Park unused centroid slots far away so no point selects them.
+        for c in k..KM_CENTROIDS {
+            for d in 0..KM_FEATURES {
+                cent[c * KM_FEATURES + d] = 1.0e9;
+            }
+        }
+        let pts_lit = xla::Literal::vec1(&pts)
+            .reshape(&[KM_POINTS as i64, KM_FEATURES as i64])
+            .context("points literal")?;
+        let cent_lit = xla::Literal::vec1(&cent)
+            .reshape(&[KM_CENTROIDS as i64, KM_FEATURES as i64])
+            .context("centroid literal")?;
+        let mask_lit = xla::Literal::vec1(&mask);
+        let out = self.kmeans.run(&[pts_lit, cent_lit, mask_lit])?;
+        anyhow::ensure!(out.len() == 2, "kmeans artifact returned {}", out.len());
+        let assign_raw = out[0].to_vec::<i32>()?;
+        let cent_raw = out[1].to_vec::<f32>()?;
+        let assign = assign_raw[..n].iter().map(|&a| a as usize).collect();
+        let new_centroids = (0..k)
+            .map(|c| {
+                (0..f)
+                    .map(|d| cent_raw[c * KM_FEATURES + d] as f64)
+                    .collect()
+            })
+            .collect();
+        Ok((assign, new_centroids))
+    }
+
+    /// Full k-means via repeated artifact iterations, seeded identically
+    /// to `methodology::cluster::kmeans` (so results cross-check).
+    pub fn kmeans(
+        &self,
+        points: &[Vec<f64>],
+        k: usize,
+        iters: usize,
+        seed: u64,
+    ) -> Result<(Vec<usize>, Vec<Vec<f64>>)> {
+        // Reuse the Rust initializer for identical seeding, then drive
+        // iterations through PJRT.
+        let (_, mut centroids) = crate::methodology::cluster::kmeans(points, k, 0, seed);
+        let mut assign = vec![0usize; points.len()];
+        for _ in 0..iters {
+            let (a, c) = self.kmeans_step(points, &centroids)?;
+            let done = a == assign;
+            assign = a;
+            centroids = c;
+            if done {
+                break;
+            }
+        }
+        Ok((assign, centroids))
+    }
+}

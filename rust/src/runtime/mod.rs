@@ -1,0 +1,10 @@
+//! Layer-3 ↔ Layer-1/2 bridge: load the AOT-compiled JAX/Pallas analytics
+//! artifacts (HLO text, produced by `python/compile/aot.py`) onto the
+//! PJRT CPU client and execute them from Rust. Python never runs at
+//! analysis time — the artifacts are self-contained.
+
+pub mod analytics;
+pub mod artifact;
+
+pub use analytics::Analytics;
+pub use artifact::{default_artifact_dir, Artifact, PjrtContext};

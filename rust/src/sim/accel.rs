@@ -1,0 +1,172 @@
+//! Dataflow accelerator model for case study 2 (§5.2; substitutes the
+//! Aladdin pre-RTL simulator).
+//!
+//! Aladdin estimates a custom accelerator's runtime from the workload's
+//! dynamic data-flow graph: compute latency is the graph's critical path
+//! under a resource bound, memory latency comes from the memory system.
+//! We model exactly the quantity the case study isolates — the *placement*
+//! of the same accelerator: **compute-centric** (off-chip, host-side DRAM
+//! latency/bandwidth) vs **NDP** (logic layer: vault latency/bandwidth).
+//!
+//! The accelerator itself is characterized by three numbers extracted
+//! from the kernel's op graph: ops per element, dependent-chain depth per
+//! element, and bytes touched per element.
+
+use super::config::SystemConfig;
+
+/// Static description of an accelerated kernel's dataflow.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelDataflow {
+    /// Total arithmetic ops per element of work.
+    pub ops_per_elem: f64,
+    /// Length of the dependent chain per element (limits pipelining).
+    pub chain_depth: f64,
+    /// Bytes read+written per element.
+    pub bytes_per_elem: f64,
+    /// Number of elements.
+    pub elems: f64,
+    /// Fraction of memory traffic that is latency-bound (dependent /
+    /// irregular), as opposed to streamable.
+    pub latency_bound_frac: f64,
+}
+
+/// Accelerator hardware resources (identical for both placements).
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    /// Functional units (ops/cycle).
+    pub fu: f64,
+    /// Clock (Hz).
+    pub freq_hz: f64,
+    /// Outstanding memory requests supported.
+    pub mlp: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            fu: 16.0,
+            freq_hz: 1.0e9,
+            mlp: 16.0,
+        }
+    }
+}
+
+/// Placement of the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    ComputeCentric,
+    Ndp,
+}
+
+/// Estimated runtime (seconds) of the kernel on the accelerator at the
+/// given placement, against the given memory system parameters.
+pub fn accel_time(
+    k: &KernelDataflow,
+    a: &AccelConfig,
+    sys: &SystemConfig,
+    placement: Placement,
+) -> f64 {
+    // Compute: resource-bound ops; independent elements pipeline through
+    // the datapath, so the dependent chain contributes only pipeline fill.
+    let compute_cycles = (k.ops_per_elem * k.elems) / a.fu + k.chain_depth;
+    let compute_s = compute_cycles / a.freq_hz;
+
+    // Memory: bandwidth term + latency term for the irregular fraction.
+    let bytes = k.bytes_per_elem * k.elems;
+    let (bw, lat_cycles) = match placement {
+        Placement::ComputeCentric => (
+            sys.dram.host_peak_bw,
+            (sys.dram.row_hit_cycles + sys.dram.act_cycles / 2 + sys.dram.host_link_cycles) as f64,
+        ),
+        Placement::Ndp => (
+            sys.dram.ndp_peak_bw,
+            (sys.dram.row_hit_cycles + sys.dram.act_cycles / 2) as f64,
+        ),
+    };
+    let lat_s = lat_cycles / sys.freq_hz;
+    let bw_time = bytes / bw;
+    let latency_reqs = bytes / sys.dram.line_bytes as f64 * k.latency_bound_frac;
+    let lat_time = latency_reqs * lat_s / a.mlp;
+    let mem_s = bw_time + lat_time;
+
+    // Accelerators overlap compute with memory up to the longer of the two.
+    compute_s.max(mem_s)
+}
+
+/// Speedup of the NDP placement over the compute-centric placement.
+pub fn ndp_speedup(k: &KernelDataflow, a: &AccelConfig, sys: &SystemConfig) -> f64 {
+    accel_time(k, a, sys, Placement::ComputeCentric) / accel_time(k, a, sys, Placement::Ndp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{CoreModel, SystemConfig};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::host(1, CoreModel::OutOfOrder)
+    }
+
+    /// Streaming, bandwidth-hungry kernel (class 1a-like, e.g. gemm with
+    /// huge matrices streamed from DRAM).
+    fn bw_kernel() -> KernelDataflow {
+        KernelDataflow {
+            ops_per_elem: 1.0,
+            chain_depth: 4.0,
+            bytes_per_elem: 24.0,
+            elems: 1e7,
+            latency_bound_frac: 0.0,
+        }
+    }
+
+    /// Latency-bound kernel (class 1b-like).
+    fn lat_kernel() -> KernelDataflow {
+        KernelDataflow {
+            ops_per_elem: 4.0,
+            chain_depth: 4.0,
+            bytes_per_elem: 8.0,
+            elems: 1e7,
+            latency_bound_frac: 0.5,
+        }
+    }
+
+    /// Compute-bound kernel (class 2c-like).
+    fn compute_kernel() -> KernelDataflow {
+        KernelDataflow {
+            ops_per_elem: 200.0,
+            chain_depth: 4.0,
+            bytes_per_elem: 2.0,
+            elems: 1e7,
+            latency_bound_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn bw_bound_kernel_gains_from_ndp() {
+        let s = ndp_speedup(&bw_kernel(), &AccelConfig::default(), &sys());
+        assert!(s > 1.5, "speedup={s}");
+    }
+
+    #[test]
+    fn latency_bound_kernel_gains_modestly() {
+        let s = ndp_speedup(&lat_kernel(), &AccelConfig::default(), &sys());
+        assert!(s > 1.05, "speedup={s}");
+        assert!(s < ndp_speedup(&bw_kernel(), &AccelConfig::default(), &sys()));
+    }
+
+    #[test]
+    fn compute_bound_kernel_gains_nothing() {
+        let s = ndp_speedup(&compute_kernel(), &AccelConfig::default(), &sys());
+        assert!((s - 1.0).abs() < 0.05, "speedup={s}");
+    }
+
+    #[test]
+    fn time_positive_and_monotone_in_elems() {
+        let a = AccelConfig::default();
+        let mut k = bw_kernel();
+        let t1 = accel_time(&k, &a, &sys(), Placement::Ndp);
+        k.elems *= 2.0;
+        let t2 = accel_time(&k, &a, &sys(), Placement::Ndp);
+        assert!(t1 > 0.0 && t2 > 1.9 * t1);
+    }
+}

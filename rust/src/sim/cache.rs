@@ -1,0 +1,333 @@
+//! Set-associative cache with LRU replacement, dirty bits and
+//! back-invalidation support (for the inclusive shared L3).
+//!
+//! Replay-speed matters (hundreds of millions of lookups per experiment
+//! sweep), so the structure is flat arrays indexed by `set * ways + way`,
+//! with an 8-bit LRU stamp per way and tag scans over at most 16 ways.
+
+use super::config::CacheConfig;
+
+const INVALID: u64 = u64::MAX;
+
+/// Result of a cache lookup-and-fill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupResult {
+    Hit,
+    /// Missed; a victim line (tag, dirty) may have been evicted to make room.
+    Miss { evicted: Option<Evicted> },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    pub line_addr: u64,
+    pub dirty: bool,
+}
+
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    shift: u32,
+    /// Line tags (full line address, i.e. `addr >> shift`), INVALID if empty.
+    tags: Vec<u64>,
+    /// LRU counters: larger = more recently used.
+    lru: Vec<u32>,
+    dirty: Vec<bool>,
+    tick: u32,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: &CacheConfig) -> Cache {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two: {sets}");
+        Cache {
+            sets,
+            ways: cfg.ways,
+            shift: cfg.line_bytes.trailing_zeros(),
+            tags: vec![INVALID; sets * cfg.ways],
+            lru: vec![0; sets * cfg.ways],
+            dirty: vec![false; sets * cfg.ways],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    pub fn line_of(&self, addr: u64) -> u64 {
+        addr >> self.shift
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        (line as usize) & (self.sets - 1)
+    }
+
+    /// Access `addr`; on miss, allocate the line (write-allocate), evicting
+    /// the LRU way. `write` marks the line dirty.
+    ///
+    /// Hot path: a single fused pass over the set finds a hit *and*
+    /// tracks the victim (first empty way, else max-age) so a miss needs
+    /// no second scan; slices hoist the bounds checks out of the loop.
+    pub fn access(&mut self, addr: u64, write: bool) -> LookupResult {
+        let line = addr >> self.shift;
+        let set = (line as usize) & (self.sets - 1);
+        let base = set * self.ways;
+        self.tick = self.tick.wrapping_add(1);
+        let tick = self.tick;
+        let tags = &mut self.tags[base..base + self.ways];
+        let lru = &mut self.lru[base..base + self.ways];
+        let mut victim = 0usize;
+        let mut oldest_age = 0u32;
+        let mut have_empty = false;
+        for (w, (&t, &stamp)) in tags.iter().zip(lru.iter()).enumerate() {
+            if t == line {
+                lru[w] = tick;
+                if write {
+                    self.dirty[base + w] = true;
+                }
+                self.hits += 1;
+                return LookupResult::Hit;
+            }
+            if !have_empty {
+                if t == INVALID {
+                    victim = w;
+                    have_empty = true;
+                } else {
+                    let age = tick.wrapping_sub(stamp);
+                    if age >= oldest_age {
+                        oldest_age = age;
+                        victim = w;
+                    }
+                }
+            }
+        }
+        self.misses += 1;
+        let evicted = if !have_empty {
+            let ev_line = tags[victim];
+            let ev_dirty = self.dirty[base + victim];
+            if ev_dirty {
+                self.writebacks += 1;
+            }
+            Some(Evicted {
+                line_addr: ev_line << self.shift,
+                dirty: ev_dirty,
+            })
+        } else {
+            None
+        };
+        tags[victim] = line;
+        lru[victim] = tick;
+        self.dirty[base + victim] = write;
+        LookupResult::Miss { evicted }
+    }
+
+    /// Probe without modifying state.
+    pub fn contains(&self, addr: u64) -> bool {
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        (0..self.ways).any(|w| self.tags[base + w] == line)
+    }
+
+    /// Insert a line without counting a demand miss (prefetch fill).
+    /// Returns the evicted line, if any.
+    pub fn fill(&mut self, addr: u64) -> Option<Evicted> {
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        self.tick = self.tick.wrapping_add(1);
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                return None; // already present
+            }
+        }
+        let mut victim = 0;
+        let mut oldest_age = 0u32;
+        for w in 0..self.ways {
+            if self.tags[base + w] == INVALID {
+                victim = w;
+                break;
+            }
+            let age = self.tick.wrapping_sub(self.lru[base + w]);
+            if age >= oldest_age {
+                oldest_age = age;
+                victim = w;
+            }
+        }
+        let evicted = if self.tags[base + victim] != INVALID {
+            let ev_dirty = self.dirty[base + victim];
+            if ev_dirty {
+                self.writebacks += 1;
+            }
+            Some(Evicted {
+                line_addr: self.tags[base + victim] << self.shift,
+                dirty: ev_dirty,
+            })
+        } else {
+            None
+        };
+        self.tags[base + victim] = line;
+        // Insert with low recency so useless prefetches die fast-ish but a
+        // subsequent demand hit promotes the line.
+        self.lru[base + victim] = self.tick;
+        self.dirty[base + victim] = false;
+        evicted
+    }
+
+    /// Remove a line (inclusive-L3 back-invalidation). Returns whether the
+    /// line was present and dirty.
+    pub fn invalidate(&mut self, addr: u64) -> Option<bool> {
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                let was_dirty = self.dirty[base + w];
+                self.tags[base + w] = INVALID;
+                self.dirty[base + w] = false;
+                return Some(was_dirty);
+            }
+        }
+        None
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::CacheConfig;
+
+    fn tiny(ways: usize, sets: usize) -> Cache {
+        Cache::new(&CacheConfig {
+            size_bytes: 64 * ways * sets,
+            ways,
+            line_bytes: 64,
+            latency_cycles: 1,
+            epj_hit: 0.0,
+            epj_miss: 0.0,
+        })
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = tiny(2, 4);
+        assert!(matches!(c.access(0x40, false), LookupResult::Miss { .. }));
+        assert_eq!(c.access(0x40, false), LookupResult::Hit);
+        assert_eq!(c.access(0x7f, false), LookupResult::Hit); // same line
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = tiny(2, 1); // 1 set, 2 ways
+        c.access(0x000, false); // A
+        c.access(0x040, false); // B
+        c.access(0x000, false); // touch A => B is LRU
+        let r = c.access(0x080, false); // C evicts B
+        match r {
+            LookupResult::Miss { evicted: Some(ev) } => assert_eq!(ev.line_addr, 0x040),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert!(c.contains(0x000));
+        assert!(!c.contains(0x040));
+        assert!(c.contains(0x080));
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        let mut c = tiny(1, 1);
+        c.access(0x000, true); // dirty A
+        let r = c.access(0x040, false); // evict A
+        match r {
+            LookupResult::Miss { evicted: Some(ev) } => {
+                assert!(ev.dirty);
+                assert_eq!(ev.line_addr, 0x000);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn write_hit_marks_dirty() {
+        let mut c = tiny(1, 1);
+        c.access(0x000, false);
+        c.access(0x000, true); // write hit -> dirty
+        let r = c.access(0x040, false);
+        match r {
+            LookupResult::Miss { evicted: Some(ev) } => assert!(ev.dirty),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut c = tiny(2, 2);
+        c.access(0x000, true);
+        assert_eq!(c.invalidate(0x000), Some(true));
+        assert_eq!(c.invalidate(0x000), None);
+        assert!(!c.contains(0x000));
+    }
+
+    #[test]
+    fn fill_does_not_count_demand_miss() {
+        let mut c = tiny(2, 2);
+        c.fill(0x000);
+        assert_eq!(c.misses, 0);
+        assert_eq!(c.access(0x000, false), LookupResult::Hit);
+    }
+
+    #[test]
+    fn fill_existing_line_is_noop() {
+        let mut c = tiny(2, 2);
+        c.access(0x000, true);
+        assert!(c.fill(0x000).is_none());
+        // dirtiness preserved
+        let _ = c.access(0x080, false);
+        let _ = c.access(0x100, false);
+        // (line 0x000 may be evicted above; just assert no crash)
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_misses() {
+        let mut c = tiny(8, 64); // 32 KiB
+        // Stream 128 KiB twice: second pass should still miss (capacity).
+        for pass in 0..2 {
+            for i in 0..2048u64 {
+                c.access(i * 64, false);
+            }
+            if pass == 0 {
+                assert_eq!(c.misses, 2048);
+            }
+        }
+        assert_eq!(c.misses, 4096);
+        assert_eq!(c.hits, 0);
+    }
+
+    #[test]
+    fn small_working_set_all_hits_after_warmup() {
+        let mut c = tiny(8, 64);
+        for i in 0..256u64 {
+            c.access(i * 64, false);
+        }
+        c.reset_stats();
+        for _ in 0..4 {
+            for i in 0..256u64 {
+                c.access(i * 64, false);
+            }
+        }
+        assert_eq!(c.misses, 0);
+        assert_eq!(c.hits, 1024);
+    }
+}

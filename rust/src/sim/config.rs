@@ -1,0 +1,308 @@
+//! System configurations (paper Table 1).
+//!
+//! Three primary systems are simulated, differing **only** in the memory
+//! hierarchy so that performance/energy deltas isolate data movement:
+//!
+//! * **Host CPU** — private L1 (32 KiB) + L2 (256 KiB), shared inclusive
+//!   L3 (8 MiB, 16 banks), off-chip HMC link.
+//! * **Host CPU + prefetcher** — same, plus an L2 stream prefetcher
+//!   (2-degree, 16 streams, 64 entries).
+//! * **NDP** — cores in the HMC logic layer: private read-only L1 only,
+//!   no prefetcher, direct vault access (no off-chip link).
+//!
+//! Plus the §3.4 variant: **Host NUCA** — L3 scales 2 MiB/core, banks on a
+//! 2-D mesh NoC (M/D/1 contention, 3 cycles/hop).
+
+/// Core microarchitecture model (paper §2.4.2 uses both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreModel {
+    /// 4-wide OoO, 128-entry ROB, 32-entry LSQ.
+    OutOfOrder,
+    /// 4-wide in-order.
+    InOrder,
+}
+
+/// Which of the paper's system configurations to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    Host,
+    HostPrefetch,
+    Ndp,
+    /// §3.4: host with NUCA L3 scaling 2 MiB per core over a 2-D mesh.
+    HostNuca,
+}
+
+impl SystemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::Host => "host",
+            SystemKind::HostPrefetch => "host+pf",
+            SystemKind::Ndp => "ndp",
+            SystemKind::HostNuca => "host-nuca",
+        }
+    }
+}
+
+/// Geometry/latency of one cache level.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    pub latency_cycles: u64,
+    /// pJ per hit / per miss (lookup energy), Table 1.
+    pub epj_hit: f64,
+    pub epj_miss: f64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / self.line_bytes / self.ways
+    }
+}
+
+/// HMC v2.0-like main memory (Table 1 "Common").
+#[derive(Debug, Clone, Copy)]
+pub struct DramConfig {
+    pub vaults: usize,
+    pub banks_per_vault: usize,
+    pub row_bytes: usize,
+    pub line_bytes: usize,
+    /// Core cycles (@2.4 GHz) for a row-buffer hit at the vault.
+    pub row_hit_cycles: u64,
+    /// Additional cycles for activate (row closed).
+    pub act_cycles: u64,
+    /// Additional cycles for precharge+activate (row conflict).
+    pub pre_act_cycles: u64,
+    /// Extra cycles a *host* access pays to cross the off-chip link
+    /// (SerDes + controller + round trip).
+    pub host_link_cycles: u64,
+    /// Peak off-chip link bandwidth usable by the host (bytes/sec).
+    pub host_peak_bw: f64,
+    /// Peak aggregate internal bandwidth usable by NDP cores (bytes/sec).
+    pub ndp_peak_bw: f64,
+    /// Energy per bit: DRAM internal, logic layer, off-chip link (pJ/bit).
+    pub epj_bit_internal: f64,
+    pub epj_bit_logic: f64,
+    pub epj_bit_link: f64,
+}
+
+/// NUCA / NDP-mesh NoC parameters (§3.4, §5.1).
+#[derive(Debug, Clone, Copy)]
+pub struct NocConfig {
+    pub cycles_per_hop: u64,
+    /// Energy per request at a router / per link traversal (pJ).
+    pub epj_router: f64,
+    pub epj_link: f64,
+}
+
+/// A complete simulated system.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemConfig {
+    pub kind: SystemKind,
+    pub core: CoreModel,
+    pub cores: usize,
+    pub freq_hz: f64,
+    pub issue_width: u64,
+    pub rob: u64,
+    pub lsq: u64,
+    /// Max outstanding L1 misses per core (MSHRs) — MLP ceiling.
+    pub mshrs: u64,
+    pub l1: CacheConfig,
+    /// None for NDP (single cache level).
+    pub l2: Option<CacheConfig>,
+    /// None for NDP. Shared and inclusive when present.
+    pub l3: Option<CacheConfig>,
+    pub l3_banks: usize,
+    pub prefetch: bool,
+    /// Prefetcher: number of stream trackers and prefetch degree.
+    pub pf_streams: usize,
+    pub pf_degree: usize,
+    pub dram: DramConfig,
+    pub noc: NocConfig,
+    /// NUCA: L3 is 2 MiB/core, accessed over the mesh.
+    pub nuca: bool,
+}
+
+pub const LINE: usize = 64;
+
+fn l1_cfg() -> CacheConfig {
+    CacheConfig {
+        size_bytes: 32 << 10,
+        ways: 8,
+        line_bytes: LINE,
+        latency_cycles: 4,
+        epj_hit: 15.0,
+        epj_miss: 33.0,
+    }
+}
+
+fn l2_cfg() -> CacheConfig {
+    CacheConfig {
+        size_bytes: 256 << 10,
+        ways: 8,
+        line_bytes: LINE,
+        latency_cycles: 7,
+        epj_hit: 46.0,
+        epj_miss: 93.0,
+    }
+}
+
+fn l3_cfg(size_bytes: usize) -> CacheConfig {
+    CacheConfig {
+        size_bytes,
+        ways: 16,
+        line_bytes: LINE,
+        latency_cycles: 27,
+        epj_hit: 945.0,
+        epj_miss: 1904.0,
+    }
+}
+
+fn dram_cfg() -> DramConfig {
+    // Latencies in 2.4 GHz core cycles. Vault-local access ≈ 21 ns for a
+    // row hit, ≈ 42 ns with an activate; the host additionally pays the
+    // off-chip SerDes/controller round trip (≈ 40 ns). Peak bandwidths
+    // match the paper's §1 STREAM-Copy calibration (115 vs 431 GB/s).
+    DramConfig {
+        vaults: 32,
+        banks_per_vault: 8,
+        row_bytes: 256,
+        line_bytes: LINE,
+        row_hit_cycles: 50,
+        act_cycles: 50,
+        pre_act_cycles: 100,
+        host_link_cycles: 96,
+        host_peak_bw: 115.0e9,
+        ndp_peak_bw: 431.0e9,
+        epj_bit_internal: 2.0,
+        epj_bit_logic: 8.0,
+        epj_bit_link: 2.0,
+    }
+}
+
+fn noc_cfg() -> NocConfig {
+    NocConfig {
+        cycles_per_hop: 3,
+        epj_router: 63.0,
+        epj_link: 71.0,
+    }
+}
+
+impl SystemConfig {
+    /// Baseline host CPU (Table 1, fixed 8 MiB L3).
+    pub fn host(cores: usize, core: CoreModel) -> SystemConfig {
+        SystemConfig {
+            kind: SystemKind::Host,
+            core,
+            cores,
+            freq_hz: 2.4e9,
+            issue_width: 4,
+            rob: 128,
+            lsq: 32,
+            mshrs: 10,
+            l1: l1_cfg(),
+            l2: Some(l2_cfg()),
+            l3: Some(l3_cfg(8 << 20)),
+            l3_banks: 16,
+            prefetch: false,
+            pf_streams: 16,
+            pf_degree: 2,
+            dram: dram_cfg(),
+            noc: noc_cfg(),
+            nuca: false,
+        }
+    }
+
+    /// Host + L2 stream prefetcher.
+    pub fn host_prefetch(cores: usize, core: CoreModel) -> SystemConfig {
+        let mut c = Self::host(cores, core);
+        c.kind = SystemKind::HostPrefetch;
+        c.prefetch = true;
+        c
+    }
+
+    /// NDP cores in the logic layer: read-only L1 only, no prefetcher.
+    pub fn ndp(cores: usize, core: CoreModel) -> SystemConfig {
+        let mut c = Self::host(cores, core);
+        c.kind = SystemKind::Ndp;
+        c.l2 = None;
+        c.l3 = None;
+        c
+    }
+
+    /// §3.4 NUCA host: L3 = 2 MiB/core on an (n+1)×(n+1) mesh.
+    pub fn host_nuca(cores: usize, core: CoreModel) -> SystemConfig {
+        let mut c = Self::host(cores, core);
+        c.kind = SystemKind::HostNuca;
+        c.l3 = Some(l3_cfg((2 << 20) * cores));
+        c.l3_banks = cores.max(1);
+        c.nuca = true;
+        c
+    }
+
+    pub fn by_kind(kind: SystemKind, cores: usize, core: CoreModel) -> SystemConfig {
+        match kind {
+            SystemKind::Host => Self::host(cores, core),
+            SystemKind::HostPrefetch => Self::host_prefetch(cores, core),
+            SystemKind::Ndp => Self::ndp(cores, core),
+            SystemKind::HostNuca => Self::host_nuca(cores, core),
+        }
+    }
+
+    /// Peak DRAM bandwidth this system can draw (bytes/s).
+    pub fn peak_bw(&self) -> f64 {
+        match self.kind {
+            SystemKind::Ndp => self.dram.ndp_peak_bw,
+            _ => self.dram.host_peak_bw,
+        }
+    }
+
+    /// Mesh side for the NUCA NoC: (n+1)×(n+1) with n = ceil(sqrt(cores)).
+    pub fn mesh_side(&self) -> usize {
+        let n = (self.cores as f64).sqrt().ceil() as usize;
+        n + 1
+    }
+}
+
+/// The paper's core-count sweep.
+pub const CORE_SWEEP: [usize; 5] = [1, 4, 16, 64, 256];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_geometry() {
+        let h = SystemConfig::host(4, CoreModel::OutOfOrder);
+        assert_eq!(h.l1.sets(), 64);
+        assert_eq!(h.l2.unwrap().sets(), 512);
+        assert_eq!(h.l3.unwrap().sets(), 8192);
+        assert_eq!(h.l3_banks, 16);
+        assert_eq!(h.dram.vaults, 32);
+        assert_eq!(h.dram.banks_per_vault, 8);
+    }
+
+    #[test]
+    fn ndp_has_single_level() {
+        let n = SystemConfig::ndp(16, CoreModel::InOrder);
+        assert!(n.l2.is_none() && n.l3.is_none());
+        assert!(!n.prefetch);
+        assert!(n.peak_bw() > 3.0 * SystemConfig::host(16, CoreModel::InOrder).peak_bw());
+    }
+
+    #[test]
+    fn nuca_scales_l3_with_cores() {
+        let c = SystemConfig::host_nuca(256, CoreModel::OutOfOrder);
+        assert_eq!(c.l3.unwrap().size_bytes, 512 << 20);
+        assert_eq!(c.l3_banks, 256);
+        assert_eq!(c.mesh_side(), 17);
+    }
+
+    #[test]
+    fn bw_ratio_matches_paper_calibration() {
+        let c = SystemConfig::host(1, CoreModel::OutOfOrder);
+        let ratio = c.dram.ndp_peak_bw / c.dram.host_peak_bw;
+        assert!((ratio - 3.7478).abs() < 0.01, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,247 @@
+//! HMC-like main memory model (substitutes Ramulator).
+//!
+//! Geometry per Table 1: 32 vaults × 8 banks/vault, 256 B row buffers,
+//! open-page policy, HMC default Row:Column:Bank:Vault interleaving (so
+//! consecutive cache lines stripe across vaults first, then banks, then
+//! columns within a row).
+//!
+//! The model tracks per-(vault,bank) open rows to classify each access as
+//! a row **hit** (CAS only), **miss** (activate) or **conflict**
+//! (precharge + activate), yielding an unloaded service latency. Loaded
+//! latency (queuing at the memory controller / link) is applied later by
+//! the timing fixed point in `engine.rs` using an M/D/1 waiting-time term,
+//! which is how ZSim++'s network model treats contention as well.
+
+use super::config::DramConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOutcome {
+    Hit,
+    Miss,
+    Conflict,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct DramStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    /// Per-vault access counts (drives the NDP NoC case study + balance).
+    pub vault_accesses: Vec<u64>,
+}
+
+pub struct Dram {
+    cfg: DramConfig,
+    /// Open row per (vault, bank); u64::MAX = closed.
+    open_row: Vec<u64>,
+    /// Last bank touched per vault — a same-bank different-row access is a
+    /// conflict; a different-bank access with a closed row is a plain miss.
+    pub stats: DramStats,
+    line_shift: u32,
+    vault_mask: u64,
+    vault_bits: u32,
+    bank_mask: u64,
+    bank_bits: u32,
+    col_bits: u32,
+}
+
+impl Dram {
+    pub fn new(cfg: &DramConfig) -> Dram {
+        assert!(cfg.vaults.is_power_of_two());
+        assert!(cfg.banks_per_vault.is_power_of_two());
+        let lines_per_row = (cfg.row_bytes / cfg.line_bytes).max(1);
+        Dram {
+            cfg: *cfg,
+            open_row: vec![u64::MAX; cfg.vaults * cfg.banks_per_vault],
+            stats: DramStats {
+                vault_accesses: vec![0; cfg.vaults],
+                ..Default::default()
+            },
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            vault_mask: (cfg.vaults - 1) as u64,
+            vault_bits: cfg.vaults.trailing_zeros(),
+            bank_mask: (cfg.banks_per_vault - 1) as u64,
+            bank_bits: cfg.banks_per_vault.trailing_zeros(),
+            col_bits: lines_per_row.trailing_zeros(),
+        }
+    }
+
+    /// HMC default interleave: line address bits are, from LSB:
+    /// [vault][bank][column][row...].
+    #[inline]
+    pub fn decode(&self, addr: u64) -> (usize, usize, u64) {
+        let line = addr >> self.line_shift;
+        let vault = (line & self.vault_mask) as usize;
+        let bank = ((line >> self.vault_bits) & self.bank_mask) as usize;
+        let row = line >> (self.vault_bits + self.bank_bits + self.col_bits);
+        (vault, bank, row)
+    }
+
+    #[inline]
+    pub fn vault_of(&self, addr: u64) -> usize {
+        ((addr >> self.line_shift) & self.vault_mask) as usize
+    }
+
+    /// Service one line access; returns (outcome, unloaded service cycles
+    /// at the vault — excludes off-chip link and queuing).
+    pub fn access(&mut self, addr: u64, write: bool) -> (RowOutcome, u64) {
+        let (vault, bank, row) = self.decode(addr);
+        let slot = vault * self.cfg.banks_per_vault + bank;
+        let open = self.open_row[slot];
+        let outcome = if open == row {
+            RowOutcome::Hit
+        } else if open == u64::MAX {
+            RowOutcome::Miss
+        } else {
+            RowOutcome::Conflict
+        };
+        self.open_row[slot] = row;
+        self.stats.vault_accesses[vault] += 1;
+        if write {
+            self.stats.writes += 1;
+        } else {
+            self.stats.reads += 1;
+        }
+        let lat = match outcome {
+            RowOutcome::Hit => {
+                self.stats.row_hits += 1;
+                self.cfg.row_hit_cycles
+            }
+            RowOutcome::Miss => {
+                self.stats.row_misses += 1;
+                self.cfg.row_hit_cycles + self.cfg.act_cycles
+            }
+            RowOutcome::Conflict => {
+                self.stats.row_conflicts += 1;
+                self.cfg.row_hit_cycles + self.cfg.pre_act_cycles
+            }
+        };
+        (outcome, lat)
+    }
+
+    /// Mean unloaded service latency observed so far (cycles).
+    pub fn mean_service_cycles(&self) -> f64 {
+        let n = (self.stats.row_hits + self.stats.row_misses + self.stats.row_conflicts).max(1);
+        let total = self.stats.row_hits * self.cfg.row_hit_cycles
+            + self.stats.row_misses * (self.cfg.row_hit_cycles + self.cfg.act_cycles)
+            + self.stats.row_conflicts * (self.cfg.row_hit_cycles + self.cfg.pre_act_cycles);
+        total as f64 / n as f64
+    }
+
+    /// Load-balance metric across vaults: max/mean access ratio (1.0 =
+    /// perfectly balanced). Used by case study 1.
+    pub fn vault_imbalance(&self) -> f64 {
+        let max = self.stats.vault_accesses.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.stats.vault_accesses.iter().sum::<u64>() as f64
+            / self.stats.vault_accesses.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// M/D/1 mean waiting time (in the same unit as `service`), given
+/// utilization `rho` in [0,1). Clamped below saturation so the fixed
+/// point in the engine converges; the clamp region is reported by the
+/// engine as "queue-full reissue" pressure (paper §3.3.4 observes
+/// controller-queue reissues at 256 cores).
+pub fn md1_wait(service: f64, rho: f64) -> f64 {
+    let rho = rho.clamp(0.0, 0.98);
+    service * rho / (2.0 * (1.0 - rho))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::SystemConfig;
+    use crate::sim::config::CoreModel;
+
+    fn dram() -> Dram {
+        Dram::new(&SystemConfig::host(1, CoreModel::OutOfOrder).dram)
+    }
+
+    #[test]
+    fn decode_interleaves_vault_first() {
+        let d = dram();
+        let (v0, b0, r0) = d.decode(0);
+        let (v1, b1, r1) = d.decode(64);
+        assert_eq!((v0, b0, r0), (0, 0, 0));
+        assert_eq!((v1, b1), (1, 0));
+        assert_eq!(r1, 0);
+        // After 32 lines we wrap to vault 0, bank 1.
+        let (v32, b32, _) = d.decode(32 * 64);
+        assert_eq!((v32, b32), (0, 1));
+        // After 32*8=256 lines: vault 0, bank 0, column 1 (same row 0).
+        let (v, b, r) = d.decode(256 * 64);
+        assert_eq!((v, b, r), (0, 0, 0));
+        // After 1024 lines (4 columns * 256): row increments.
+        let (_, _, r) = d.decode(1024 * 64);
+        assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn row_hit_miss_conflict_sequence() {
+        let mut d = dram();
+        // First touch: bank closed -> miss.
+        let (o1, l1) = d.access(0, false);
+        assert_eq!(o1, RowOutcome::Miss);
+        // Same row (column 1 of row 0 in vault0/bank0 = line 256).
+        let (o2, l2) = d.access(256 * 64, false);
+        assert_eq!(o2, RowOutcome::Hit);
+        assert!(l2 < l1);
+        // Different row, same bank -> conflict.
+        let (o3, l3) = d.access(1024 * 64, false);
+        assert_eq!(o3, RowOutcome::Conflict);
+        assert!(l3 > l1);
+    }
+
+    #[test]
+    fn sequential_stream_mostly_hits_after_warmup() {
+        let mut d = dram();
+        for i in 0..8192u64 {
+            d.access(i * 64, false);
+        }
+        let s = &d.stats;
+        // 256 (vault,bank) pairs activate once (miss/conflict), then hit.
+        assert!(s.row_hits > 6000, "row_hits={}", s.row_hits);
+    }
+
+    #[test]
+    fn random_accesses_mostly_conflict() {
+        let mut d = dram();
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        for _ in 0..8192 {
+            d.access(rng.gen_range(1 << 32), false);
+        }
+        let s = &d.stats;
+        assert!(
+            s.row_conflicts > s.row_hits,
+            "conflicts={} hits={}",
+            s.row_conflicts,
+            s.row_hits
+        );
+    }
+
+    #[test]
+    fn vault_balance_sequential_is_even() {
+        let mut d = dram();
+        for i in 0..32 * 1024u64 {
+            d.access(i * 64, false);
+        }
+        assert!((d.vault_imbalance() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn md1_grows_superlinearly() {
+        let w1 = md1_wait(100.0, 0.5);
+        let w2 = md1_wait(100.0, 0.9);
+        assert!(w1 > 0.0);
+        assert!(w2 > 5.0 * w1);
+        assert_eq!(md1_wait(100.0, 0.0), 0.0);
+        assert!(md1_wait(100.0, 2.0).is_finite()); // clamped
+    }
+}

@@ -1,0 +1,127 @@
+//! Energy accounting (Table 1 pJ/event numbers + §3.4 NoC energy).
+//!
+//! The engine counts events during cache/DRAM replay; this module turns
+//! the counts into the paper's breakdowns: L1 / L2 / L3 / DRAM / off-chip
+//! link / NoC, in joules. (Figs 7, 9, 10, 12, 14, 15, 17.)
+
+use super::config::SystemConfig;
+
+/// Raw event counts gathered during replay.
+#[derive(Debug, Default, Clone)]
+pub struct EnergyEvents {
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub l3_hits: u64,
+    pub l3_misses: u64,
+    /// Bytes that crossed the DRAM core arrays.
+    pub dram_bytes: u64,
+    /// Bytes that crossed the vault logic layer.
+    pub logic_bytes: u64,
+    /// Bytes that crossed the off-chip link (host only).
+    pub link_bytes: u64,
+    /// NoC router traversals / link traversals (NUCA or NDP mesh).
+    pub noc_router: u64,
+    pub noc_links: u64,
+}
+
+/// Energy breakdown in joules.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    pub l1: f64,
+    pub l2: f64,
+    pub l3: f64,
+    pub dram: f64,
+    pub link: f64,
+    pub noc: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.l1 + self.l2 + self.l3 + self.dram + self.link + self.noc
+    }
+}
+
+pub fn energy(cfg: &SystemConfig, ev: &EnergyEvents) -> EnergyBreakdown {
+    let pj = 1e-12;
+    let l1 = (ev.l1_hits as f64 * cfg.l1.epj_hit + ev.l1_misses as f64 * cfg.l1.epj_miss) * pj;
+    let l2 = cfg
+        .l2
+        .map(|c| (ev.l2_hits as f64 * c.epj_hit + ev.l2_misses as f64 * c.epj_miss) * pj)
+        .unwrap_or(0.0);
+    let l3 = cfg
+        .l3
+        .map(|c| (ev.l3_hits as f64 * c.epj_hit + ev.l3_misses as f64 * c.epj_miss) * pj)
+        .unwrap_or(0.0);
+    let dram = (ev.dram_bytes as f64 * 8.0 * cfg.dram.epj_bit_internal
+        + ev.logic_bytes as f64 * 8.0 * cfg.dram.epj_bit_logic)
+        * pj;
+    let link = ev.link_bytes as f64 * 8.0 * cfg.dram.epj_bit_link * pj;
+    let noc = (ev.noc_router as f64 * cfg.noc.epj_router + ev.noc_links as f64 * cfg.noc.epj_link)
+        * pj;
+    EnergyBreakdown {
+        l1,
+        l2,
+        l3,
+        dram,
+        link,
+        noc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{CoreModel, SystemConfig};
+
+    #[test]
+    fn ndp_pays_no_l2_l3_link() {
+        let cfg = SystemConfig::ndp(4, CoreModel::OutOfOrder);
+        let ev = EnergyEvents {
+            l1_hits: 1000,
+            l1_misses: 100,
+            l2_hits: 999, // ignored: no L2
+            l3_hits: 999,
+            dram_bytes: 6400,
+            logic_bytes: 6400,
+            link_bytes: 0,
+            ..Default::default()
+        };
+        let e = energy(&cfg, &ev);
+        assert_eq!(e.l2, 0.0);
+        assert_eq!(e.l3, 0.0);
+        assert_eq!(e.link, 0.0);
+        assert!(e.l1 > 0.0 && e.dram > 0.0);
+    }
+
+    #[test]
+    fn host_l3_energy_dominates_cache_energy() {
+        // Table 1: L3 hit costs 945 pJ vs 15 pJ L1 — a few L3 accesses
+        // outweigh many L1 accesses.
+        let cfg = SystemConfig::host(4, CoreModel::OutOfOrder);
+        let ev = EnergyEvents {
+            l1_hits: 1000,
+            l3_hits: 100,
+            ..Default::default()
+        };
+        let e = energy(&cfg, &ev);
+        assert!(e.l3 > e.l1);
+    }
+
+    #[test]
+    fn dram_line_energy_scales_with_bits() {
+        let cfg = SystemConfig::host(1, CoreModel::OutOfOrder);
+        let ev = EnergyEvents {
+            dram_bytes: 64,
+            logic_bytes: 64,
+            link_bytes: 64,
+            ..Default::default()
+        };
+        let e = energy(&cfg, &ev);
+        // 512 bits * (2+8) pJ/bit = 5120 pJ dram, 512*2=1024 pJ link.
+        assert!((e.dram - 5120e-12).abs() < 1e-15);
+        assert!((e.link - 1024e-12).abs() < 1e-15);
+        assert!((e.total() - (e.dram + e.link)).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,927 @@
+//! Replay engine + timing model.
+//!
+//! Two phases (DESIGN.md §3):
+//!
+//! 1. **Replay** (exact): every access of every core's trace walks the
+//!    configured hierarchy (private L1/L2, shared L3, HMC DRAM with row
+//!    buffers, optional stream prefetcher), interleaved round-robin in
+//!    64-access quanta. This yields exact hit/miss/writeback/row-outcome
+//!    counts, per-service-level load counts split by dependence, NUCA hop
+//!    sums and energy events.
+//! 2. **Timing** (closed-form fixed point): per-core cycles are computed
+//!    from the aggregates with an MLP-limited interval model (OoO can
+//!    overlap independent misses up to min(MSHRs, ROB-window density);
+//!    in-order barely overlaps), then DRAM queuing (M/D/1 at the
+//!    controller/link) and the bandwidth roofline are applied and the
+//!    loop iterates until the DRAM latency stops moving.
+//!
+//! The model trades absolute cycle accuracy for speed and transparency;
+//! the paper's *relative* claims (who wins, where crossovers happen) are
+//! driven by hit ratios, bandwidth ceilings and queuing — all first-class
+//! here.
+
+use super::cache::{Cache, LookupResult};
+use super::config::{CoreModel, SystemConfig, SystemKind};
+use super::dram::{md1_wait, Dram};
+use super::energy::{energy, EnergyBreakdown, EnergyEvents};
+use super::noc::{HopHistogram, Mesh};
+use super::prefetcher::StreamPrefetcher;
+use super::{Access, Trace};
+
+/// Service level of a load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    L1 = 0,
+    L2 = 1,
+    L3 = 2,
+    Dram = 3,
+}
+
+/// Per-core replay aggregates.
+#[derive(Debug, Default, Clone)]
+struct CoreAgg {
+    instr: u64,
+    ops: u64,
+    loads: u64,
+    stores: u64,
+    line_touches: u64,
+    /// Load counts by [dep][level].
+    cnt: [[u64; 4]; 2],
+    /// Demand (load+store) miss counters — exclude writeback and prefetch
+    /// traffic so LFMR/MPKI match the paper's definitions.
+    d_l1_miss: u64,
+    d_l3_miss: u64,
+    /// Demand loads that hit a prefetched L2 line, by original source
+    /// (L3 / DRAM). Charged a late-prefetch partial latency: a degree-2
+    /// stream prefetcher cannot fully hide the fetch at high demand rates.
+    pf_hit_l3: u64,
+    pf_hit_dram: u64,
+    /// Sum of unloaded DRAM service cycles over this core's DRAM loads.
+    dram_service_sum: f64,
+    /// NUCA: total mesh hops for L3 + memory-controller trips.
+    noc_hops: u64,
+    noc_requests: u64,
+}
+
+/// Everything the methodology needs from one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub kind: SystemKind,
+    pub core_model: CoreModel,
+    pub cores: usize,
+    /// Wall-clock seconds (slowest core).
+    pub time_s: f64,
+    /// Total cycles of the slowest core.
+    pub cycles: f64,
+    pub instr: u64,
+    pub ipc: f64,
+    /// Fraction of cycles lost to data-access stalls (top-down
+    /// "Memory Bound" — Step 1's filter metric).
+    pub memory_bound: f64,
+    // Cache counters (aggregate over cores).
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub l3_hits: u64,
+    pub l3_misses: u64,
+    // Derived metrics (paper §2.4.1).
+    pub mpki: f64,
+    pub lfmr: f64,
+    pub ai: f64,
+    /// Mean loaded latency per load, cycles (Figs 8/13) with per-level
+    /// contributions [l1, l2, l3, dram].
+    pub amat: f64,
+    pub amat_parts: [f64; 4],
+    /// Fraction of loads serviced at each level (Fig 11).
+    pub level_fracs: [f64; 4],
+    // DRAM.
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub row_hit_rate: f64,
+    /// Achieved DRAM bandwidth, bytes/sec.
+    pub bw_bytes_s: f64,
+    /// Channel/link utilization after the fixed point (0..~1).
+    pub dram_rho: f64,
+    /// Loaded DRAM latency seen by a demand load (cycles).
+    pub dram_loaded_lat: f64,
+    /// Max/mean vault pressure (case study 1 load balance).
+    pub vault_imbalance: f64,
+    // Prefetcher.
+    pub pf_issued: u64,
+    pub pf_accuracy: f64,
+    // NoC (NUCA or NDP-mesh runs).
+    pub noc_mean_hops: f64,
+    pub hop_hist: Vec<u64>,
+    /// LLC (or DRAM for NDP) misses attributed to each static basic block
+    /// (Fig 24), indexed by `Access::bb`.
+    pub bb_llc_misses: Vec<u64>,
+    // Energy.
+    pub energy: EnergyBreakdown,
+}
+
+impl SimResult {
+    /// Performance = 1 / execution time (paper footnote 11).
+    pub fn perf(&self) -> f64 {
+        1.0 / self.time_s
+    }
+}
+
+/// Options beyond the system config: the NDP-mesh model of case study 1.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimOptions {
+    /// Model the inter-vault NoC for NDP (case study 1 / §5.1): each
+    /// memory access pays mesh hops between the core's vault and the
+    /// target vault. Off for the paper's main configuration.
+    pub ndp_mesh: bool,
+}
+
+pub fn simulate(cfg: &SystemConfig, trace: &Trace) -> SimResult {
+    simulate_opt(cfg, trace, SimOptions::default())
+}
+
+pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimResult {
+    assert_eq!(
+        trace.len(),
+        cfg.cores,
+        "trace has {} threads but config has {} cores",
+        trace.len(),
+        cfg.cores
+    );
+    let n = cfg.cores;
+    let line = cfg.l1.line_bytes as u64;
+
+    // --- Phase 1: replay ---
+    let mut l1s: Vec<Cache> = (0..n).map(|_| Cache::new(&cfg.l1)).collect();
+    let mut l2s: Vec<Option<Cache>> = (0..n).map(|_| cfg.l2.as_ref().map(Cache::new)).collect();
+    let mut l3 = cfg.l3.as_ref().map(Cache::new);
+    let mut dram = Dram::new(&cfg.dram);
+    let mut pfs: Vec<Option<StreamPrefetcher>> = (0..n)
+        .map(|_| {
+            if cfg.prefetch {
+                Some(StreamPrefetcher::new(cfg.pf_streams, cfg.pf_degree))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    let mut agg: Vec<CoreAgg> = vec![CoreAgg::default(); n];
+    // Lines currently in L2 that arrived via prefetch and have not yet
+    // been demanded: line -> came_from_dram.
+    let mut pf_pending: Vec<std::collections::HashMap<u64, bool>> =
+        (0..n).map(|_| std::collections::HashMap::new()).collect();
+    let mut ev = EnergyEvents::default();
+    let mut last_line: Vec<u64> = vec![u64::MAX; n];
+    let mut hop_hist = HopHistogram::default();
+    let mut bb_llc = vec![0u64; 256];
+
+    // NUCA mesh: cores at nodes 0..cores, L3 banks spread over the mesh by
+    // line interleave; memory controllers on the extra row.
+    let nuca_mesh = Mesh::new(cfg.mesh_side(), cfg.mesh_side());
+    // NDP mesh (case study 1): vault grid.
+    let ndp_mesh = Mesh::square_for(cfg.dram.vaults);
+
+    let quantum = 64usize;
+    let mut cursors = vec![0usize; n];
+    let mut live = n;
+    while live > 0 {
+        live = 0;
+        for core in 0..n {
+            let t = &trace[core];
+            let mut i = cursors[core];
+            if i >= t.len() {
+                continue;
+            }
+            let end = (i + quantum).min(t.len());
+            while i < end {
+                let a = t[i];
+                i += 1;
+                replay_one(
+                    cfg,
+                    opt,
+                    core,
+                    a,
+                    &mut l1s,
+                    &mut l2s,
+                    &mut l3,
+                    &mut dram,
+                    &mut pfs,
+                    &mut pf_pending,
+                    &mut agg,
+                    &mut ev,
+                    &mut last_line,
+                    &mut hop_hist,
+                    &mut bb_llc,
+                    &nuca_mesh,
+                    &ndp_mesh,
+                    line,
+                );
+            }
+            cursors[core] = i;
+            if i < t.len() {
+                live += 1;
+            }
+        }
+    }
+
+    // Aggregate cache counters.
+    let l1_hits: u64 = l1s.iter().map(|c| c.hits).sum();
+    let l1_misses: u64 = l1s.iter().map(|c| c.misses).sum();
+    let l2_hits: u64 = l2s.iter().flatten().map(|c| c.hits).sum();
+    let l2_misses: u64 = l2s.iter().flatten().map(|c| c.misses).sum();
+    let (l3_hits, l3_misses) = l3
+        .as_ref()
+        .map(|c| (c.hits, c.misses))
+        .unwrap_or((0, 0));
+
+    // --- Phase 2: timing fixed point ---
+    let instr: u64 = agg.iter().map(|a| a.instr).sum();
+    let total_loads: u64 = agg.iter().map(|a| a.loads).sum();
+    let width = cfg.issue_width as f64;
+
+    // Unloaded per-level latencies (cycles).
+    let lat_l1 = cfg.l1.latency_cycles as f64;
+    let lat_l2 = lat_l1 + cfg.l2.map(|c| c.latency_cycles).unwrap_or(0) as f64;
+    let lat_l3_base = lat_l2 + cfg.l3.map(|c| c.latency_cycles).unwrap_or(0) as f64;
+
+    // Mean NUCA hop latency per L3 request.
+    let total_noc_reqs: u64 = agg.iter().map(|a| a.noc_requests).sum();
+    let mean_hops = if total_noc_reqs > 0 {
+        agg.iter().map(|a| a.noc_hops).sum::<u64>() as f64 / total_noc_reqs as f64
+    } else if opt.ndp_mesh {
+        hop_hist.mean()
+    } else {
+        0.0
+    };
+
+    // DRAM traffic (bytes) that crosses the bottleneck resource.
+    let dram_bytes = ev.dram_bytes as f64;
+    let mean_service = dram.mean_service_cycles();
+    let vault_imbalance = dram.vault_imbalance();
+    // Imbalanced vault pressure lowers the usable aggregate bandwidth.
+    let peak_bw = cfg.peak_bw() / vault_imbalance.max(1.0).min(4.0);
+
+    let mut dram_extra = match cfg.kind {
+        SystemKind::Ndp => 0.0,
+        _ => cfg.dram.host_link_cycles as f64,
+    };
+    if opt.ndp_mesh {
+        dram_extra += mean_hops * cfg.noc.cycles_per_hop as f64;
+    }
+
+    // Loaded-latency fixed point. Two regimes, modeled separately so the
+    // iteration is stable (see DESIGN.md §3):
+    //  * latency regime (rho well below 1): M/D/1 queuing inflates the
+    //    DRAM latency seen by stalls; the feedback rho used for *timing*
+    //    is capped at 0.75 — past that point real cores throttle at the
+    //    MSHRs and the system self-regulates at the bandwidth limit;
+    //  * bandwidth regime: execution time has a hard floor of
+    //    bytes / peak_bw. The *reported* rho/loaded latency use the true
+    //    utilization so AMAT reflects saturation.
+    let base_dram = if cfg.l3.is_some() { lat_l3_base } else { lat_l1 };
+    let mut dram_lat = base_dram + mean_service + dram_extra;
+    let mut noc_queue = 0.0;
+    let mut time_cycles = 0.0f64;
+    let mut rho = 0.0;
+    let bw_floor_cycles = dram_bytes / peak_bw * cfg.freq_hz;
+
+    let stall_cycles = |dram_lat: f64, noc_queue: f64| -> f64 {
+        let lat_l3 = lat_l3_base
+            + if cfg.nuca {
+                mean_hops * cfg.noc.cycles_per_hop as f64 + noc_queue
+            } else {
+                0.0
+            };
+        let mut max_cycles = 0.0f64;
+        for a in agg.iter() {
+            let base = a.instr as f64 / width;
+            let lvl_lat = [lat_l1, lat_l2, lat_l3, dram_lat];
+            // MLP is a property of the core's *combined* outstanding-miss
+            // stream: misses at different levels overlap with each other,
+            // so the ROB-window density uses all beyond-L1 loads.
+            let miss_loads: u64 = (1..4).map(|l| a.cnt[0][l] + a.cnt[1][l]).sum::<u64>()
+                + a.pf_hit_l3
+                + a.pf_hit_dram;
+            let inter = (a.instr as f64 / (miss_loads.max(1)) as f64).max(1.0);
+            let window_mlp = (cfg.rob as f64 / inter).max(1.0);
+            let cap = match cfg.core {
+                CoreModel::OutOfOrder => cfg.mshrs as f64,
+                CoreModel::InOrder => 2.0,
+            };
+            let mlp = window_mlp.min(cap).max(1.0);
+            let mut stall = 0.0;
+            for (lvl, &lat) in lvl_lat.iter().enumerate() {
+                let dep = a.cnt[1][lvl] as f64;
+                let indep = a.cnt[0][lvl] as f64;
+                // Dependent loads serialize fully.
+                stall += dep * lat;
+                if indep > 0.0 && lvl > 0 {
+                    stall += indep * lat / mlp;
+                }
+                // Independent L1 hits are pipelined (no stall).
+            }
+            // Late-prefetch partial latency: a degree-2 stream prefetcher
+            // hides about half of the source latency at steady demand.
+            const LATE: f64 = 0.5;
+            stall += a.pf_hit_l3 as f64 * (lat_l2 + LATE * (lat_l3 - lat_l2)) / mlp;
+            stall += a.pf_hit_dram as f64 * (lat_l2 + LATE * (dram_lat - lat_l2)) / mlp;
+            max_cycles = max_cycles.max(base + stall);
+        }
+        max_cycles
+    };
+
+    for _ in 0..12 {
+        let new_time = stall_cycles(dram_lat, noc_queue).max(bw_floor_cycles);
+        rho = (dram_bytes / (new_time / cfg.freq_hz)) / peak_bw;
+        let rho_fb = rho.min(0.75); // timing feedback cap (self-regulation)
+        let queue = md1_wait(mean_service, rho_fb);
+        let new_dram_lat = base_dram + mean_service + dram_extra + queue;
+        // NUCA NoC contention from L3 traffic.
+        if cfg.nuca {
+            let links = (2 * nuca_mesh.nodes()) as f64;
+            let inj = total_noc_reqs as f64 / new_time.max(1.0);
+            let load = super::noc::NocLoad {
+                inj_rate: inj,
+                mean_hops: mean_hops.max(1.0),
+                service: cfg.noc.cycles_per_hop as f64,
+            };
+            noc_queue = load.queue_cycles(links);
+        }
+        let moved = (new_dram_lat - dram_lat).abs() / dram_lat.max(1.0);
+        // Damped update for stability.
+        dram_lat = 0.5 * dram_lat + 0.5 * new_dram_lat;
+        time_cycles = new_time;
+        if moved < 1e-3 {
+            break;
+        }
+    }
+    // Reported loaded latency reflects true utilization (saturated queues).
+    dram_lat = base_dram + mean_service + dram_extra + md1_wait(mean_service, rho);
+
+    if std::env::var("DAMOV_DEBUG").is_ok() {
+        for (i, a) in agg.iter().enumerate().take(2) {
+            eprintln!(
+                "[debug] core{i}: instr={} loads={} cnt_indep={:?} cnt_dep={:?} pf=({},{}) \
+                 lat=[{lat_l1},{lat_l2},{lat_l3_base},{dram_lat:.0}] svc={mean_service:.0} time={time_cycles:.0} \
+                 stall_at_dlat={:.0} floor={bw_floor_cycles:.0}",
+                a.instr,
+                a.loads,
+                a.cnt[0],
+                a.cnt[1],
+                a.pf_hit_l3,
+                a.pf_hit_dram,
+                stall_cycles(dram_lat, noc_queue),
+            );
+        }
+    }
+
+    // Memory-bound % from the final latency set (recompute stalls of the
+    // slowest core; use aggregate ratio which is what VTune reports).
+    let lat_l3 = lat_l3_base
+        + if cfg.nuca {
+            mean_hops * cfg.noc.cycles_per_hop as f64 + noc_queue
+        } else {
+            0.0
+        };
+    let lvl_lat = [lat_l1, lat_l2, lat_l3, dram_lat];
+    let mut total_stall = 0.0;
+    let mut total_base = 0.0;
+    for a in agg.iter() {
+        total_base += a.instr as f64 / width;
+        let miss_loads: u64 = (1..4).map(|l| a.cnt[0][l] + a.cnt[1][l]).sum::<u64>()
+            + a.pf_hit_l3
+            + a.pf_hit_dram;
+        let inter = (a.instr as f64 / (miss_loads.max(1)) as f64).max(1.0);
+        let cap = match cfg.core {
+            CoreModel::OutOfOrder => cfg.mshrs as f64,
+            CoreModel::InOrder => 2.0,
+        };
+        let mlp = (cfg.rob as f64 / inter).max(1.0).min(cap).max(1.0);
+        for (lvl, &lat) in lvl_lat.iter().enumerate() {
+            let dep = a.cnt[1][lvl] as f64;
+            let indep = a.cnt[0][lvl] as f64;
+            total_stall += dep * lat;
+            if indep > 0.0 && lvl > 0 {
+                total_stall += indep * lat / mlp;
+            }
+        }
+        total_stall += a.pf_hit_l3 as f64 * (lat_l2 + 0.5 * (lat_l3 - lat_l2)) / mlp;
+        total_stall += a.pf_hit_dram as f64 * (lat_l2 + 0.5 * (dram_lat - lat_l2)) / mlp;
+    }
+    let memory_bound = total_stall / (total_base + total_stall).max(1.0);
+
+    // AMAT (loaded) + per-level parts, over loads.
+    let mut amat_parts = [0.0f64; 4];
+    let mut level_counts = [0u64; 4];
+    for a in agg.iter() {
+        for lvl in 0..4 {
+            level_counts[lvl] += a.cnt[0][lvl] + a.cnt[1][lvl];
+        }
+        // Prefetch-covered loads are serviced at L2.
+        level_counts[1] += a.pf_hit_l3 + a.pf_hit_dram;
+    }
+    for lvl in 0..4 {
+        amat_parts[lvl] = lvl_lat[lvl] * level_counts[lvl] as f64 / total_loads.max(1) as f64;
+    }
+    let amat: f64 = amat_parts.iter().sum();
+    let level_fracs = [
+        level_counts[0] as f64 / total_loads.max(1) as f64,
+        level_counts[1] as f64 / total_loads.max(1) as f64,
+        level_counts[2] as f64 / total_loads.max(1) as f64,
+        level_counts[3] as f64 / total_loads.max(1) as f64,
+    ];
+
+    let time_s = time_cycles / cfg.freq_hz;
+    let ops: u64 = agg.iter().map(|a| a.ops).sum();
+    let line_touches: u64 = agg.iter().map(|a| a.line_touches).sum();
+
+    // LFMR / MPKI over *demand* accesses (paper §2.4.1; writeback and
+    // prefetch traffic excluded). For NDP runs (no L3) we report the
+    // L1-based equivalents so the fields stay meaningful.
+    let d_l1_miss: u64 = agg.iter().map(|a| a.d_l1_miss).sum();
+    let d_l3_miss: u64 = agg.iter().map(|a| a.d_l3_miss).sum();
+    let (lfmr, mpki) = if cfg.l3.is_some() {
+        (
+            d_l3_miss as f64 / d_l1_miss.max(1) as f64,
+            d_l3_miss as f64 / (instr as f64 / 1000.0),
+        )
+    } else {
+        (1.0, d_l1_miss as f64 / (instr as f64 / 1000.0))
+    };
+
+    let dram_total = dram.stats.reads + dram.stats.writes;
+    let row_hit_rate = dram.stats.row_hits as f64 / dram_total.max(1) as f64;
+
+    let pf_issued: u64 = pfs.iter().flatten().map(|p| p.issued).sum();
+    let pf_acc = {
+        let (u, i): (u64, u64) = pfs
+            .iter()
+            .flatten()
+            .fold((0, 0), |(u, i), p| (u + p.useful, i + p.issued));
+        if i == 0 {
+            1.0
+        } else {
+            (u as f64 / i as f64).min(1.0)
+        }
+    };
+
+    let e = energy(cfg, &ev);
+
+    SimResult {
+        kind: cfg.kind,
+        core_model: cfg.core,
+        cores: n,
+        time_s,
+        cycles: time_cycles,
+        instr,
+        ipc: instr as f64 / time_cycles.max(1.0),
+        memory_bound,
+        l1_hits,
+        l1_misses,
+        l2_hits,
+        l2_misses,
+        l3_hits,
+        l3_misses,
+        mpki,
+        lfmr,
+        ai: ops as f64 / line_touches.max(1) as f64,
+        amat,
+        amat_parts,
+        level_fracs,
+        dram_reads: dram.stats.reads,
+        dram_writes: dram.stats.writes,
+        row_hit_rate,
+        bw_bytes_s: dram_bytes / time_s.max(1e-12),
+        dram_rho: rho,
+        dram_loaded_lat: dram_lat,
+        vault_imbalance,
+        pf_issued,
+        pf_accuracy: pf_acc,
+        noc_mean_hops: mean_hops,
+        hop_hist: hop_hist.counts.clone(),
+        bb_llc_misses: bb_llc,
+        energy: e,
+    }
+}
+
+/// Replay a single access through the hierarchy, updating all state.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn replay_one(
+    cfg: &SystemConfig,
+    opt: SimOptions,
+    core: usize,
+    a: Access,
+    l1s: &mut [Cache],
+    l2s: &mut [Option<Cache>],
+    l3: &mut Option<Cache>,
+    dram: &mut Dram,
+    pfs: &mut [Option<StreamPrefetcher>],
+    pf_pending: &mut [std::collections::HashMap<u64, bool>],
+    agg: &mut [CoreAgg],
+    ev: &mut EnergyEvents,
+    last_line: &mut [u64],
+    hop_hist: &mut HopHistogram,
+    bb_llc: &mut [u64],
+    nuca_mesh: &Mesh,
+    ndp_mesh: &Mesh,
+    line: u64,
+) {
+    let ag = &mut agg[core];
+    ag.instr += a.gap as u64 + 1;
+    ag.ops += a.ops as u64;
+    if a.write {
+        ag.stores += 1;
+    } else {
+        ag.loads += 1;
+    }
+    let ln = a.addr / line;
+    if ln != last_line[core] {
+        ag.line_touches += 1;
+        last_line[core] = ln;
+    }
+    let dep = a.dep as usize;
+    let is_ndp = cfg.kind == SystemKind::Ndp;
+
+    // NDP stores bypass the read-only L1 entirely.
+    if is_ndp && a.write {
+        l1s[core].invalidate(a.addr);
+        let (_, _svc) = dram.access(a.addr, true);
+        // Fine-grained 8 B write through the logic layer (no
+        // read-for-ownership, no full-line transfer).
+        ev.dram_bytes += 8;
+        ev.logic_bytes += 8;
+        if opt.ndp_mesh {
+            let from = core % cfg.dram.vaults;
+            let hops = ndp_mesh.hops(from, dram.vault_of(a.addr));
+            hop_hist.record(hops);
+            ev.noc_router += hops + 1;
+            ev.noc_links += hops;
+        }
+        return;
+    }
+
+    // L1.
+    match l1s[core].access(a.addr, a.write && !is_ndp) {
+        LookupResult::Hit => {
+            ev.l1_hits += 1;
+            if !a.write {
+                agg[core].cnt[dep][0] += 1;
+            }
+            return;
+        }
+        LookupResult::Miss { evicted } => {
+            ev.l1_misses += 1;
+            agg[core].d_l1_miss += 1;
+            if let Some(e) = evicted {
+                if e.dirty {
+                    // Writeback into L2 (host) or DRAM (NDP; cannot happen:
+                    // NDP L1 is read-only so lines are never dirty).
+                    if let Some(l2) = l2s[core].as_mut() {
+                        let _ = l2.access(e.line_addr, true);
+                        ev.l2_hits += 1; // writeback port access energy
+                    }
+                }
+            }
+        }
+    }
+
+    if is_ndp {
+        // L1 miss -> direct vault access.
+        let (_, svc) = dram.access(a.addr, false);
+        bb_llc[a.bb as usize] += 1;
+        ev.dram_bytes += line;
+        ev.logic_bytes += line;
+        let mut extra_hops = 0u64;
+        if opt.ndp_mesh {
+            let from = core % cfg.dram.vaults;
+            extra_hops = ndp_mesh.hops(from, dram.vault_of(a.addr));
+            hop_hist.record(extra_hops);
+            ev.noc_router += extra_hops + 1;
+            ev.noc_links += extra_hops;
+        }
+        if !a.write {
+            agg[core].cnt[dep][3] += 1;
+            agg[core].dram_service_sum += svc as f64;
+        }
+        let _ = extra_hops;
+        return;
+    }
+
+    // Host: L2.
+    let l2 = l2s[core].as_mut().expect("host config has L2");
+    let l2_line = a.addr / line;
+    let mut l2_result_hit = false;
+    let mut pf_src: Option<bool> = None; // Some(from_dram) if pf-covered
+    match l2.access(a.addr, a.write) {
+        LookupResult::Hit => {
+            ev.l2_hits += 1;
+            l2_result_hit = true;
+            pf_src = pf_pending[core].remove(&l2_line);
+        }
+        LookupResult::Miss { evicted } => {
+            ev.l2_misses += 1;
+            if let Some(e) = evicted {
+                if e.dirty {
+                    if let Some(l3c) = l3.as_mut() {
+                        let _ = l3c.access(e.line_addr, true);
+                        ev.l3_hits += 1; // writeback access energy
+                    }
+                }
+            }
+        }
+    }
+
+    // Prefetcher observes the L2 access stream (demand L1 misses).
+    if let Some(pf) = pfs[core].as_mut() {
+        let pf_lines = pf.observe(l2_line);
+        for pl in pf_lines {
+            let pf_addr = pl * line;
+            // Fill L2 (and L3) with the prefetched line; count DRAM
+            // traffic if the line was not on chip.
+            let in_l2 = l2s[core].as_ref().unwrap().contains(pf_addr);
+            let on_chip = in_l2 || l3.as_ref().map(|c| c.contains(pf_addr)).unwrap_or(false);
+            if !in_l2 {
+                // Only a line actually moved into L2 counts as covered.
+                pf_pending[core].insert(pl, !on_chip);
+                if pf_pending[core].len() > 8192 {
+                    pf_pending[core].clear(); // stale-entry pressure valve
+                }
+            }
+            if !on_chip {
+                let (_, _svc) = dram.access(pf_addr, false);
+                ev.dram_bytes += line;
+                ev.logic_bytes += line;
+                ev.link_bytes += line;
+                if let Some(l3c) = l3.as_mut() {
+                    if let Some(evd) = l3c.fill(pf_addr) {
+                        if evd.dirty {
+                            dram.access(evd.line_addr, true);
+                            ev.dram_bytes += line;
+                            ev.logic_bytes += line;
+                            ev.link_bytes += line;
+                        }
+                    }
+                }
+            }
+            if let Some(evd) = l2s[core].as_mut().unwrap().fill(pf_addr) {
+                if evd.dirty {
+                    if let Some(l3c) = l3.as_mut() {
+                        let _ = l3c.access(evd.line_addr, true);
+                        ev.l3_hits += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    if l2_result_hit {
+        if !a.write {
+            match pf_src {
+                Some(true) => agg[core].pf_hit_dram += 1,
+                Some(false) => agg[core].pf_hit_l3 += 1,
+                None => agg[core].cnt[dep][1] += 1,
+            }
+        }
+        return;
+    }
+
+    // Host: shared L3.
+    let l3c = l3.as_mut().expect("host config has L3");
+    // NUCA: request travels core -> L3 bank of this line.
+    if cfg.nuca {
+        let bank = (l2_line as usize) % cfg.l3_banks;
+        let bank_node = bank % nuca_mesh.nodes();
+        let core_node = core % nuca_mesh.nodes();
+        let hops = nuca_mesh.hops(core_node, bank_node);
+        agg[core].noc_hops += hops;
+        agg[core].noc_requests += 1;
+        ev.noc_router += hops + 1;
+        ev.noc_links += hops;
+    }
+    match l3c.access(a.addr, a.write) {
+        LookupResult::Hit => {
+            ev.l3_hits += 1;
+            if !a.write {
+                agg[core].cnt[dep][2] += 1;
+            }
+        }
+        LookupResult::Miss { evicted } => {
+            ev.l3_misses += 1;
+            agg[core].d_l3_miss += 1;
+            bb_llc[a.bb as usize] += 1;
+            if let Some(e) = evicted {
+                if e.dirty {
+                    dram.access(e.line_addr, true);
+                    ev.dram_bytes += line;
+                    ev.logic_bytes += line;
+                    ev.link_bytes += line;
+                }
+            }
+            let (_, svc) = dram.access(a.addr, a.write);
+            ev.dram_bytes += line;
+            ev.logic_bytes += line;
+            ev.link_bytes += line;
+            if !a.write {
+                agg[core].cnt[dep][3] += 1;
+                agg[core].dram_service_sum += svc as f64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{CoreModel, SystemConfig};
+    use crate::sim::Access;
+    use crate::util::rng::Xoshiro256;
+
+    /// Sequential streaming trace: `n` loads walking a large array.
+    fn stream_trace(cores: usize, n_per_core: usize, stride: u64) -> Vec<Vec<Access>> {
+        (0..cores)
+            .map(|c| {
+                let base = c as u64 * (1 << 30);
+                (0..n_per_core)
+                    .map(|i| Access::load(base + i as u64 * stride, 2, 2))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Pointer-chasing trace over a working set of `lines` lines.
+    fn chase_trace(cores: usize, n_per_core: usize, lines: u64) -> Vec<Vec<Access>> {
+        (0..cores)
+            .map(|c| {
+                let mut rng = Xoshiro256::new(c as u64 + 99);
+                let base = c as u64 * (1 << 30);
+                (0..n_per_core)
+                    .map(|_| Access::load_dep(base + rng.gen_range(lines) * 64, 4, 1))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Small hot working set that fits in L1.
+    fn hot_trace(cores: usize, n_per_core: usize) -> Vec<Vec<Access>> {
+        (0..cores)
+            .map(|c| {
+                let base = c as u64 * (1 << 30);
+                (0..n_per_core)
+                    .map(|i| Access::load(base + (i as u64 % 128) * 64, 3, 8))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stream_misses_dominate_l1() {
+        let cfg = SystemConfig::host(1, CoreModel::OutOfOrder);
+        let r = simulate(&cfg, &stream_trace(1, 20_000, 64));
+        // Every access touches a fresh line.
+        assert!(r.l1_misses > 19_000, "l1_misses={}", r.l1_misses);
+        assert!(r.lfmr > 0.9, "lfmr={}", r.lfmr);
+        assert!(r.mpki > 10.0, "mpki={}", r.mpki);
+    }
+
+    #[test]
+    fn hot_set_hits_l1() {
+        let cfg = SystemConfig::host(1, CoreModel::OutOfOrder);
+        let r = simulate(&cfg, &hot_trace(1, 100_000));
+        assert!(r.l1_hits > 99_000);
+        assert!(r.mpki < 1.0, "mpki={}", r.mpki);
+        assert!(r.memory_bound < 0.3, "memory_bound={}", r.memory_bound);
+    }
+
+    #[test]
+    fn ndp_beats_host_on_bandwidth_bound_many_cores() {
+        // Class-1a shape: at 64 cores a streaming workload saturates the
+        // host link but not the NDP internal bandwidth.
+        let n = 64;
+        let t = stream_trace(n, 8_000, 64);
+        let host = simulate(&SystemConfig::host(n, CoreModel::OutOfOrder), &t);
+        let ndp = simulate(&SystemConfig::ndp(n, CoreModel::OutOfOrder), &t);
+        assert!(
+            ndp.perf() > 1.3 * host.perf(),
+            "ndp={} host={}",
+            ndp.perf(),
+            host.perf()
+        );
+        assert!(host.dram_rho > 0.8, "host rho={}", host.dram_rho);
+    }
+
+    #[test]
+    fn host_beats_ndp_on_cache_friendly() {
+        // Class-2c shape: L2-resident working set loves the deep hierarchy.
+        let cores = 4;
+        let t: Vec<Vec<Access>> = (0..cores)
+            .map(|c| {
+                let base = c as u64 * (1 << 30);
+                // 128 KiB per-core working set: fits L2, not L1.
+                (0..40_000)
+                    .map(|i| Access::load(base + (i as u64 * 37 % 2048) * 64, 6, 24))
+                    .collect()
+            })
+            .collect();
+        let host = simulate(&SystemConfig::host(cores, CoreModel::OutOfOrder), &t);
+        let ndp = simulate(&SystemConfig::ndp(cores, CoreModel::OutOfOrder), &t);
+        assert!(
+            host.perf() > ndp.perf(),
+            "host={} ndp={}",
+            host.perf(),
+            ndp.perf()
+        );
+    }
+
+    #[test]
+    fn dependent_chase_is_latency_bound_and_ndp_helps() {
+        // Class-1b shape: low MPKI (low rate), high LFMR, dependent loads.
+        let cores = 4;
+        let t = chase_trace(cores, 8_000, 1 << 22); // 256 MiB working set
+        let host = simulate(&SystemConfig::host(cores, CoreModel::OutOfOrder), &t);
+        let ndp = simulate(&SystemConfig::ndp(cores, CoreModel::OutOfOrder), &t);
+        assert!(host.lfmr > 0.9, "lfmr={}", host.lfmr);
+        assert!(ndp.perf() > host.perf());
+        // Dominated by latency, not bandwidth.
+        assert!(host.dram_rho < 0.5, "rho={}", host.dram_rho);
+        assert!(host.memory_bound > 0.5);
+    }
+
+    #[test]
+    fn prefetcher_helps_streaming_at_low_core_count() {
+        let cfg = SystemConfig::host(1, CoreModel::InOrder);
+        let cfg_pf = SystemConfig::host_prefetch(1, CoreModel::InOrder);
+        let t = stream_trace(1, 20_000, 64);
+        let base = simulate(&cfg, &t);
+        let pf = simulate(&cfg_pf, &t);
+        assert!(pf.pf_issued > 0);
+        assert!(pf.pf_accuracy > 0.5, "acc={}", pf.pf_accuracy);
+        // Prefetched lines convert DRAM loads into L2 hits.
+        assert!(
+            pf.level_fracs[3] < base.level_fracs[3],
+            "pf dram frac {} vs {}",
+            pf.level_fracs[3],
+            base.level_fracs[3]
+        );
+        assert!(pf.perf() > base.perf());
+    }
+
+    #[test]
+    fn inorder_slower_than_ooo_on_memory_bound() {
+        let t = stream_trace(4, 10_000, 64);
+        let ooo = simulate(&SystemConfig::host(4, CoreModel::OutOfOrder), &t);
+        let ino = simulate(&SystemConfig::host(4, CoreModel::InOrder), &t);
+        assert!(ooo.perf() > ino.perf());
+    }
+
+    #[test]
+    fn level_fracs_sum_to_one_for_loads() {
+        let t = chase_trace(2, 5_000, 1 << 16);
+        let r = simulate(&SystemConfig::host(2, CoreModel::OutOfOrder), &t);
+        let sum: f64 = r.level_fracs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+    }
+
+    #[test]
+    fn energy_breakdown_ndp_lacks_l2l3() {
+        let t = stream_trace(2, 5_000, 64);
+        let ndp = simulate(&SystemConfig::ndp(2, CoreModel::OutOfOrder), &t);
+        assert_eq!(ndp.energy.l2, 0.0);
+        assert_eq!(ndp.energy.l3, 0.0);
+        assert_eq!(ndp.energy.link, 0.0);
+        let host = simulate(&SystemConfig::host(2, CoreModel::OutOfOrder), &t);
+        assert!(host.energy.l3 > 0.0 && host.energy.link > 0.0);
+    }
+
+    #[test]
+    fn nuca_reports_hops() {
+        let t = stream_trace(4, 5_000, 64);
+        let r = simulate(&SystemConfig::host_nuca(4, CoreModel::OutOfOrder), &t);
+        assert!(r.noc_mean_hops > 0.0);
+        assert!(r.energy.noc > 0.0);
+    }
+
+    #[test]
+    fn ndp_mesh_option_records_hop_histogram() {
+        let t = stream_trace(4, 5_000, 64);
+        let r = simulate_opt(
+            &SystemConfig::ndp(4, CoreModel::OutOfOrder),
+            &t,
+            SimOptions { ndp_mesh: true },
+        );
+        let total: u64 = r.hop_hist.iter().sum();
+        assert!(total > 4_000);
+        assert!(r.noc_mean_hops > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = chase_trace(2, 3_000, 1 << 16);
+        let a = simulate(&SystemConfig::host(2, CoreModel::OutOfOrder), &t);
+        let b = simulate(&SystemConfig::host(2, CoreModel::OutOfOrder), &t);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.l3_misses, b.l3_misses);
+        assert_eq!(a.energy, b.energy);
+    }
+}

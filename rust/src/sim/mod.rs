@@ -1,0 +1,78 @@
+//! DAMOV-SIM substrate: trace-driven multicore memory-hierarchy simulator
+//! (substitutes ZSim + Ramulator; see DESIGN.md §1 and §3 for the model
+//! and its validity argument).
+
+pub mod accel;
+pub mod cache;
+pub mod config;
+pub mod dram;
+pub mod energy;
+pub mod engine;
+pub mod noc;
+pub mod prefetcher;
+
+pub use config::{CoreModel, SystemConfig, SystemKind, CORE_SWEEP, LINE};
+pub use engine::{simulate, SimResult};
+
+/// One memory reference in a workload trace.
+///
+/// `gap` counts non-memory instructions executed since the previous
+/// access (drives IPC and the ROB-window MLP estimate); `ops` counts the
+/// arithmetic/logic operations attributed to this access (drives AI);
+/// `dep` marks loads whose *address* depends on the previous load's data
+/// (pointer chasing — these can never overlap in the core).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub addr: u64,
+    pub write: bool,
+    pub dep: bool,
+    /// Static basic-block id of the instruction issuing this access
+    /// (drives the Fig 24/25 fine-grained-offload case study).
+    pub bb: u8,
+    pub gap: u16,
+    pub ops: u16,
+}
+
+impl Access {
+    pub fn load(addr: u64, gap: u16, ops: u16) -> Access {
+        Access {
+            addr,
+            write: false,
+            dep: false,
+            bb: 0,
+            gap,
+            ops,
+        }
+    }
+
+    pub fn load_dep(addr: u64, gap: u16, ops: u16) -> Access {
+        Access {
+            addr,
+            write: false,
+            dep: true,
+            bb: 0,
+            gap,
+            ops,
+        }
+    }
+
+    pub fn store(addr: u64, gap: u16, ops: u16) -> Access {
+        Access {
+            addr,
+            write: true,
+            dep: false,
+            bb: 0,
+            gap,
+            ops,
+        }
+    }
+
+    /// Tag with a basic-block id.
+    pub fn in_bb(mut self, bb: u8) -> Access {
+        self.bb = bb;
+        self
+    }
+}
+
+/// A multi-threaded trace: one access stream per simulated core.
+pub type Trace = Vec<Vec<Access>>;

@@ -1,0 +1,189 @@
+//! Network-on-chip models.
+//!
+//! Two uses in the paper:
+//! * §3.4 NUCA host: cores + distributed L3 banks + memory controllers on
+//!   an (n+1)×(n+1) 2-D mesh; L3 bank of an address is selected by line
+//!   interleaving; each L3 access pays XY-routing hop latency plus M/D/1
+//!   link contention (ZSim++'s model), 3 cycles/hop.
+//! * §5.1 NDP mesh: 32 vaults' NDP cores on a 6×6 mesh; each remote-vault
+//!   memory access pays hop latency; the hop distribution (Fig 21) and
+//!   the slowdown vs an ideal zero-latency NoC (Fig 20) are reported.
+
+/// 2-D mesh geometry with XY routing.
+#[derive(Debug, Clone, Copy)]
+pub struct Mesh {
+    pub side_x: usize,
+    pub side_y: usize,
+}
+
+impl Mesh {
+    pub fn new(side_x: usize, side_y: usize) -> Mesh {
+        Mesh { side_x, side_y }
+    }
+
+    /// Square mesh that fits `n` endpoints.
+    pub fn square_for(n: usize) -> Mesh {
+        let side = (n as f64).sqrt().ceil() as usize;
+        Mesh::new(side.max(1), side.max(1))
+    }
+
+    pub fn coords(&self, node: usize) -> (usize, usize) {
+        (node % self.side_x, node / self.side_x)
+    }
+
+    /// Manhattan hop count between two node ids (XY routing).
+    pub fn hops(&self, a: usize, b: usize) -> u64 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u64
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.side_x * self.side_y
+    }
+
+    /// Mean hops under uniform-random traffic (analytic for a mesh).
+    pub fn mean_uniform_hops(&self) -> f64 {
+        // E|x1-x2| for uniform over 0..k-1 is (k^2-1)/(3k).
+        let ex = |k: usize| {
+            let k = k as f64;
+            (k * k - 1.0) / (3.0 * k)
+        };
+        ex(self.side_x) + ex(self.side_y)
+    }
+}
+
+/// Aggregate NoC contention model: mean per-request latency given a mesh,
+/// a mean hop count, per-hop cycles and the offered load. Per ZSim++ we
+/// treat each link as an M/D/1 server; utilization is approximated from
+/// aggregate traffic spread over the bisection links.
+#[derive(Debug, Clone, Copy)]
+pub struct NocLoad {
+    /// Requests per core-cycle injected into the mesh (aggregate).
+    pub inj_rate: f64,
+    /// Mean hops per request.
+    pub mean_hops: f64,
+    /// Service cycles per flit at a link.
+    pub service: f64,
+}
+
+impl NocLoad {
+    /// Mean queuing delay per request in cycles. Total link demand is
+    /// `inj_rate * mean_hops` link-traversals/cycle spread over `links`
+    /// links; each traversal waits an M/D/1 time at its link.
+    pub fn queue_cycles(&self, links: f64) -> f64 {
+        if links <= 0.0 {
+            return 0.0;
+        }
+        let rho = (self.inj_rate * self.mean_hops * self.service / links).clamp(0.0, 0.98);
+        super::dram::md1_wait(self.service, rho) * self.mean_hops
+    }
+}
+
+/// Histogram of hop counts (Fig 21): `counts[h]` = requests that traveled
+/// `h` hops.
+#[derive(Debug, Clone, Default)]
+pub struct HopHistogram {
+    pub counts: Vec<u64>,
+}
+
+impl HopHistogram {
+    pub fn record(&mut self, hops: u64) {
+        let h = hops as usize;
+        if self.counts.len() <= h {
+            self.counts.resize(h + 1, 0);
+        }
+        self.counts[h] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn fraction(&self, h: usize) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            *self.counts.get(h).unwrap_or(&0) as f64 / t as f64
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(h, c)| h as f64 * *c as f64)
+            .sum::<f64>()
+            / t as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hops_xy() {
+        let m = Mesh::new(6, 6);
+        assert_eq!(m.hops(0, 0), 0);
+        assert_eq!(m.hops(0, 5), 5);
+        assert_eq!(m.hops(0, 35), 10); // corner to corner
+        assert_eq!(m.hops(7, 14), 2); // (1,1) -> (2,2)
+    }
+
+    #[test]
+    fn square_fit() {
+        assert_eq!(Mesh::square_for(32).nodes(), 36);
+        assert_eq!(Mesh::square_for(1).nodes(), 1);
+    }
+
+    #[test]
+    fn mean_uniform_hops_reasonable() {
+        let m = Mesh::new(6, 6);
+        let analytic = m.mean_uniform_hops();
+        // Empirical check.
+        let mut total = 0u64;
+        let mut n = 0u64;
+        for a in 0..36 {
+            for b in 0..36 {
+                total += m.hops(a, b);
+                n += 1;
+            }
+        }
+        let emp = total as f64 / n as f64;
+        assert!((analytic - emp).abs() < 0.05, "analytic={analytic} emp={emp}");
+    }
+
+    #[test]
+    fn queue_grows_with_load() {
+        let light = NocLoad {
+            inj_rate: 0.01,
+            mean_hops: 4.0,
+            service: 3.0,
+        };
+        let heavy = NocLoad {
+            inj_rate: 0.5,
+            mean_hops: 4.0,
+            service: 3.0,
+        };
+        let links = 60.0;
+        assert!(heavy.queue_cycles(links) > 10.0 * light.queue_cycles(links));
+    }
+
+    #[test]
+    fn hop_histogram() {
+        let mut h = HopHistogram::default();
+        h.record(0);
+        h.record(3);
+        h.record(3);
+        h.record(4);
+        assert_eq!(h.total(), 4);
+        assert!((h.fraction(3) - 0.5).abs() < 1e-12);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+    }
+}

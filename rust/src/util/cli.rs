@@ -1,0 +1,158 @@
+//! Tiny command-line parser (no `clap` in the offline crate set).
+//!
+//! Supports the shapes the `damov` binary needs:
+//! `damov <command> [positional...] [--flag] [--key value | --key=value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]). `known_flags` lists boolean
+    /// switches; every other `--key` consumes the next token as its value
+    /// (or uses the `=`-suffix form).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--cores 1,4,16`.
+    pub fn opt_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer {t:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = Args::parse(argv("report fig5 fig6"), &[]);
+        assert_eq!(a.command.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["fig5", "fig6"]);
+    }
+
+    #[test]
+    fn options_both_forms() {
+        let a = Args::parse(argv("sim --cores 64 --system=ndp"), &[]);
+        assert_eq!(a.opt("cores"), Some("64"));
+        assert_eq!(a.opt("system"), Some("ndp"));
+    }
+
+    #[test]
+    fn known_flags_do_not_consume() {
+        let a = Args::parse(argv("sim --verbose tracefile"), &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["tracefile"]);
+    }
+
+    #[test]
+    fn unknown_flag_before_option_is_flag() {
+        let a = Args::parse(argv("x --fast --k v"), &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(argv("x --inorder"), &[]);
+        assert!(a.flag("inorder"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(argv("x --cores 1,4,16,64"), &[]);
+        assert_eq!(a.opt_usize_list("cores", &[]), vec![1, 4, 16, 64]);
+        assert_eq!(a.opt_usize_list("missing", &[2, 3]), vec![2, 3]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(argv("x"), &[]);
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_f64("p", 0.5), 0.5);
+    }
+}

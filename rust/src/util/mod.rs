@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (the offline environment ships
+//! only the `xla` crate closure — no serde/clap/rayon/criterion/proptest).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,129 @@
+//! Scoped parallel-map over OS threads (no `rayon`/`tokio` offline).
+//!
+//! The experiment coordinator fans hundreds of independent simulations out
+//! across cores; each job is CPU-bound and seconds-long, so a simple
+//! work-stealing-free chunked scheduler with an atomic cursor is plenty.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: the `DAMOV_THREADS` env var if set,
+/// otherwise available parallelism (min 1).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DAMOV_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item of `items` in parallel, preserving order of
+/// results. `f` must be `Sync` (called concurrently from many threads).
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker panicked before storing result"))
+        .collect()
+}
+
+/// Parallel-map over an index range `0..n` (avoids materializing inputs).
+pub fn par_map_range<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, threads, |&i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..500).collect();
+        let _ = par_map(&items, 4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items: Vec<u32> = (0..10).collect();
+        assert_eq!(par_map(&items, 1, |&x| x), items);
+    }
+
+    #[test]
+    fn range_variant() {
+        assert_eq!(par_map_range(5, 3, |i| i * i), vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn actually_parallel_under_contention() {
+        // Smoke check that heavy jobs complete correctly with many threads.
+        let out = par_map_range(64, 16, |i| {
+            let mut acc = 0u64;
+            for k in 0..50_000u64 {
+                acc = acc.wrapping_mul(31).wrapping_add(k ^ i as u64);
+            }
+            acc
+        });
+        let seq = par_map_range(64, 1, |i| {
+            let mut acc = 0u64;
+            for k in 0..50_000u64 {
+                acc = acc.wrapping_mul(31).wrapping_add(k ^ i as u64);
+            }
+            acc
+        });
+        assert_eq!(out, seq);
+    }
+}

@@ -1,0 +1,205 @@
+//! Deterministic PRNGs for workload trace generation.
+//!
+//! The offline environment has no `rand` crate, so we implement the two
+//! generators every workload generator in this repo depends on:
+//! [`SplitMix64`] for seeding and [`Xoshiro256`] (xoshiro256**) as the
+//! general-purpose stream. Determinism is a hard requirement: each DAMOV
+//! workload function must produce an identical memory trace for a given
+//! seed so that experiments are reproducible across runs and machines.
+
+/// SplitMix64: tiny, fast seeder (Steele et al.). Used to expand one u64
+/// seed into the 256-bit xoshiro state and for cheap one-off hashing.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// One-shot integer hash (stateless SplitMix64 step). Handy for hash-join
+/// and histogram workloads that need a well-mixed hash function.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** 1.0 (Blackman & Vigna): the repo's general-purpose PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)`. Uses Lemire's multiply-shift reduction;
+    /// bias is negligible for the bounds used here (all < 2^40).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn gen_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.gen_range((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Approximately Zipf-distributed index in `[0, n)` with exponent `s`,
+    /// via inverse-CDF on the harmonic approximation. Used by graph and
+    /// key-skew workloads.
+    pub fn gen_zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.gen_usize(0, n);
+        }
+        let u = self.gen_f64().max(1e-12);
+        if (s - 1.0).abs() < 1e-9 {
+            let hn = (n as f64).ln() + 0.5772156649;
+            let x = (u * hn).exp_m1() + 1.0; // e^{u*H_n} ~ rank
+            return (x.min(n as f64) as usize).saturating_sub(1).min(n - 1);
+        }
+        let one_minus_s = 1.0 - s;
+        let hn = ((n as f64).powf(one_minus_s) - 1.0) / one_minus_s;
+        let x = (u * hn * one_minus_s + 1.0).powf(1.0 / one_minus_s);
+        (x.min(n as f64) as usize).saturating_sub(1).min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference values from the public-domain splitmix64.c with seed
+        // 1234567: first three outputs.
+        let mut sm = SplitMix64::new(1234567);
+        assert_eq!(sm.next_u64(), 6457827717110365317);
+        assert_eq!(sm.next_u64(), 3203168211198807973);
+        assert_eq!(sm.next_u64(), 9817491932198370423);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        let mut c = Xoshiro256::new(43);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let v = r.gen_range(17);
+            assert!(v < 17);
+        }
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_and_rough_mean() {
+        let mut r = Xoshiro256::new(9);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_low_ranks() {
+        let mut r = Xoshiro256::new(11);
+        let n = 1000;
+        let mut low = 0;
+        for _ in 0..10_000 {
+            if r.gen_zipf(n, 1.0) < 10 {
+                low += 1;
+            }
+        }
+        // Zipf(1.0): P(rank<10) ~ H_10/H_1000 ~ 0.39. Uniform would be 1%.
+        assert!(low > 2000, "low-rank draws = {low}");
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform_range() {
+        let mut r = Xoshiro256::new(13);
+        for _ in 0..1000 {
+            assert!(r.gen_zipf(50, 0.0) < 50);
+        }
+    }
+}

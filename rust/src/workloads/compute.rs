@@ -1,0 +1,127 @@
+//! Class-2c family: **compute-bound** (PLY3mm, PLYSymm, PLYDoitgen,
+//! HPGSpm, RODNw, ...).
+//!
+//! Pattern (paper §3.3.6): cache-blocked kernels with high arithmetic
+//! intensity. The per-thread block fits the private L2 (but not L1), so
+//! on the host nearly every L1 miss hits L2 (LFMR ≈ 0, MPKI ≈ 0) and the
+//! prefetcher covers the sequential block sweeps. On NDP, every L1 miss
+//! becomes a DRAM access — the paper reports 44-54% host advantage.
+//! High temporal locality comes from the multiply-accumulate re-reads.
+
+use super::{chunks, layout, Scale};
+use crate::sim::{Access, Trace};
+
+#[derive(Debug, Clone)]
+pub struct BlockedCompute {
+    /// Per-thread block in words (choose > L1, <= L2: e.g. 12K words =
+    /// 96 KiB).
+    pub block_words: usize,
+    /// Total block-sweep iterations across all threads (strong-scaled).
+    pub iters: usize,
+    /// Arithmetic ops per word access — the AI lever (>= ~4 puts the
+    /// function in the paper's "high AI" band given the 3-access/word
+    /// pattern below).
+    pub ops: u16,
+    /// Extra non-memory instructions per access.
+    pub gap: u16,
+}
+
+impl BlockedCompute {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let block = scale.n(self.block_words, 2048);
+        let iters = scale.n(self.iters, threads.max(2));
+        chunks(iters, threads)
+            .into_iter()
+            .enumerate()
+            .map(|(tid, (_, my_iters))| {
+                let base = layout::private_base(tid);
+                let mut t = Vec::with_capacity(my_iters * block * 3 / 4 + 1);
+                for it in 0..my_iters {
+                    // Sweep a quarter of the block per iteration (rotating
+                    // phase), multiply-accumulate per word: two loads of
+                    // the same word (operand reused in the FMA tree) and
+                    // a store.
+                    let quarter = block / 4;
+                    let start = (it % 4) * quarter;
+                    for i in start..start + quarter {
+                        let addr = base + i as u64 * 8;
+                        t.push(Access::load(addr, self.gap, self.ops).in_bb(1));
+                        t.push(Access::load(addr, 0, self.ops).in_bb(1));
+                        t.push(Access::store(addr, 1, self.ops).in_bb(2));
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, CoreModel, SystemConfig};
+
+    fn kernel() -> BlockedCompute {
+        BlockedCompute {
+            block_words: 12 * 1024, // 96 KiB: > L1, fits L2
+            iters: 256,
+            ops: 8,
+            gap: 4,
+        }
+    }
+
+    #[test]
+    fn host_beats_ndp_at_all_core_counts() {
+        let k = kernel();
+        for cores in [1usize, 4, 16] {
+            let host = simulate(
+                &SystemConfig::host(cores, CoreModel::OutOfOrder),
+                &k.trace(cores, Scale(1.0)),
+            );
+            let ndp = simulate(
+                &SystemConfig::ndp(cores, CoreModel::OutOfOrder),
+                &k.trace(cores, Scale(1.0)),
+            );
+            assert!(
+                host.perf() > ndp.perf(),
+                "cores={cores}: host={} ndp={}",
+                host.perf(),
+                ndp.perf()
+            );
+        }
+    }
+
+    #[test]
+    fn low_lfmr_low_mpki_high_ai() {
+        let k = kernel();
+        let r = simulate(
+            &SystemConfig::host(4, CoreModel::OutOfOrder),
+            &k.trace(4, Scale(1.0)),
+        );
+        assert!(r.lfmr < 0.3, "lfmr={}", r.lfmr);
+        assert!(r.mpki < 2.0, "mpki={}", r.mpki);
+        assert!(r.ai > 8.5, "ai={}", r.ai);
+        // 2c functions still pass the Step-1 VTune filter (>30%) but are
+        // the least memory-bound class.
+        assert!(
+            (0.2..0.8).contains(&r.memory_bound),
+            "mb={}",
+            r.memory_bound
+        );
+    }
+
+    #[test]
+    fn prefetcher_helps() {
+        let k = kernel();
+        let t = k.trace(4, Scale(1.0));
+        let base = simulate(&SystemConfig::host(4, CoreModel::OutOfOrder), &t);
+        let pf = simulate(&SystemConfig::host_prefetch(4, CoreModel::OutOfOrder), &t);
+        assert!(pf.perf() >= base.perf() * 0.99, "pf should not hurt");
+    }
+
+    #[test]
+    fn deterministic() {
+        let k = kernel();
+        assert_eq!(k.trace(3, Scale(0.2)), k.trace(3, Scale(0.2)));
+    }
+}

@@ -1,0 +1,145 @@
+//! Class-2a family: **L3-contention-bound** (PLYGramSch, SPLFftRev,
+//! SPLOcpSlave).
+//!
+//! Pattern (paper §3.3.4): each thread re-reads and updates a
+//! per-thread block that exceeds its private L1/L2 but fits the shared
+//! L3 *at low core counts*. High temporal locality (each word is touched
+//! several times within a few references — RMW accumulation), low AI,
+//! low MPKI. As cores scale, the aggregate footprint (threads ×
+//! block) overwhelms the fixed 8 MiB L3; LFMR *rises* with core count
+//! and the host collapses under controller queuing — which the NDP
+//! system sidesteps with raw internal bandwidth.
+
+use super::{chunks, layout, Scale};
+use crate::sim::{Access, Trace};
+
+#[derive(Debug, Clone)]
+pub struct SharedHotRmw {
+    /// Per-thread block size in words (constant per thread — the
+    /// algorithmic tile, e.g. the vector set Gram-Schmidt currently
+    /// orthogonalizes). Must exceed the private L2 for the class shape.
+    pub block_words: usize,
+    /// Words stepped per touch (8 = one touch per cache line keeps the
+    /// trace compact while the line footprint stays `block_words * 8` B).
+    pub stride_words: usize,
+    /// Total block sweeps summed across threads (strong-scaled work:
+    /// each thread performs `total_passes / threads` sweeps of its own
+    /// block, fractional at high core counts).
+    pub total_passes: usize,
+    pub gap: u16,
+    pub seed: u64,
+}
+
+impl SharedHotRmw {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let block = scale.n(self.block_words, 4096);
+        let stride = self.stride_words.max(1);
+        let touches_per_pass = block / stride;
+        let total_touches = touches_per_pass * self.total_passes;
+        chunks(total_touches, threads)
+            .into_iter()
+            .enumerate()
+            .map(|(tid, (_, my_touches))| {
+                let base = layout::private_base(tid);
+                let mut t = Vec::with_capacity(my_touches * 5 / 2 + 1);
+                for k in 0..my_touches {
+                    // Cyclic sweep over this thread's block; each touched
+                    // word is loaded twice and (every other touch) stored
+                    // — the accumulate pattern that yields high temporal
+                    // locality within the 32-reference Step-2 window.
+                    let idx = (k % touches_per_pass) * stride;
+                    let addr = base + idx as u64 * 8;
+                    t.push(Access::load(addr, self.gap, 0).in_bb(1));
+                    t.push(Access::load(addr, 0, 0).in_bb(1));
+                    if k % 2 == 0 {
+                        t.push(Access::store(addr, 1, 1).in_bb(2));
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, CoreModel, SystemConfig};
+
+    fn kernel() -> SharedHotRmw {
+        SharedHotRmw {
+            block_words: 64 * 1024, // 512 KiB per thread: > L2, < L3
+            stride_words: 8,
+            total_passes: 96,
+            gap: 4,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn lfmr_rises_with_core_count() {
+        let k = kernel();
+        let lfmr_at = |cores: usize| {
+            simulate(
+                &SystemConfig::host(cores, CoreModel::OutOfOrder),
+                &k.trace(cores, Scale(1.0)),
+            )
+            .lfmr
+        };
+        let low = lfmr_at(4);
+        let high = lfmr_at(64);
+        assert!(
+            high > low + 0.3,
+            "lfmr should rise with cores: 4c={low} 64c={high}"
+        );
+    }
+
+    #[test]
+    fn host_wins_low_cores_ndp_wins_high_cores() {
+        let k = kernel();
+        let perf = |cores: usize, ndp: bool| {
+            let cfg = if ndp {
+                SystemConfig::ndp(cores, CoreModel::OutOfOrder)
+            } else {
+                SystemConfig::host(cores, CoreModel::OutOfOrder)
+            };
+            simulate(&cfg, &k.trace(cores, Scale(1.0))).perf()
+        };
+        assert!(
+            perf(4, false) > perf(4, true),
+            "host should win at 4 cores"
+        );
+        assert!(
+            perf(64, true) > perf(64, false),
+            "NDP should win at 64 cores"
+        );
+    }
+
+    #[test]
+    fn low_mpki_at_reference_count() {
+        let k = kernel();
+        let r = simulate(
+            &SystemConfig::host(4, CoreModel::OutOfOrder),
+            &k.trace(4, Scale(1.0)),
+        );
+        assert!(r.mpki < 11.0, "mpki={}", r.mpki);
+    }
+
+    #[test]
+    fn word_repeats_within_window() {
+        let k = kernel();
+        let t = k.trace(1, Scale(0.2));
+        // Count immediate same-word repeats in a 32-ref sliding window —
+        // the raw signal behind the Step-2 temporal metric.
+        let mut repeats = 0usize;
+        let tr = &t[0];
+        for i in 1..tr.len().min(50_000) {
+            let lo = i.saturating_sub(31);
+            if tr[lo..i].iter().any(|a| a.addr == tr[i].addr) {
+                repeats += 1;
+            }
+        }
+        let frac = repeats as f64 / tr.len().min(50_000) as f64;
+        assert!(frac > 0.5, "repeat fraction {frac}");
+    }
+}

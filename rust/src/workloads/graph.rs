@@ -1,0 +1,252 @@
+//! Graph-processing kernels (the paper's Ligra functions, class 1a
+//! irregular).
+//!
+//! The paper evaluates Ligra kernels on two inputs with very different
+//! structure: `rMat` (power-law, scattered) and `USA` (road network:
+//! near-planar grid, spatially local but with a huge working set). We
+//! reproduce the *edgeMap access pattern* of those kernels:
+//!
+//! * **Dense** (`edgeMapDense`, e.g. PageRank / TriangleCount): iterate
+//!   all destination vertices sequentially; for each, gather the values
+//!   of its in-neighbors — sequential offset reads + per-edge scattered
+//!   value reads. Gathers are independent → high MLP → DRAM
+//!   bandwidth-bound once the value array exceeds the LLC.
+//! * **Sparse** (`edgeMapSparse`, e.g. ConnectedComponents / Radii /
+//!   KCore): iterate a scattered frontier; per edge, read the neighbor
+//!   value and conditionally update it (RMW scatter).
+//!
+//! Neighbor ids are sampled deterministically: rMat endpoints are
+//! Zipf-distributed then bit-mixed (power-law degree + scattered ids,
+//! the two properties that matter for cache behavior); grid neighbors
+//! are ±1/±width (road-network locality).
+
+use super::{chunks, layout, Scale};
+use crate::sim::{Access, Trace};
+use crate::util::rng::{mix64, Xoshiro256};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphInput {
+    RMat,
+    /// Road-network-like 2-D grid.
+    Usa,
+}
+
+impl GraphInput {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            GraphInput::RMat => "rMat",
+            GraphInput::Usa => "USA",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraversalMode {
+    Dense,
+    Sparse,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphTraversal {
+    pub input: GraphInput,
+    pub mode: TraversalMode,
+    /// Vertices.
+    pub vertices: usize,
+    /// Process every `visit_step`-th vertex (keeps the trace short while
+    /// the value array stays DRAM-sized — the property that matters).
+    pub visit_step: usize,
+    /// Average degree.
+    pub degree: usize,
+    /// Bytes per vertex value (8 = one word, 16 = rank+delta, ...).
+    pub value_words: usize,
+    pub seed: u64,
+}
+
+impl GraphTraversal {
+    fn neighbor(&self, v: usize, e: usize, nv: usize, rng: &mut Xoshiro256) -> u64 {
+        match self.input {
+            GraphInput::RMat => {
+                // Power-law endpoint, scattered by a fixed permutation.
+                let z = rng.gen_zipf(nv, 0.8);
+                mix64(z as u64 ^ self.seed) % nv as u64
+            }
+            GraphInput::Usa => {
+                // Grid: ±1, ±width with small jitter.
+                let width = (nv as f64).sqrt() as i64;
+                let delta = match e % 4 {
+                    0 => 1,
+                    1 => -1,
+                    2 => width,
+                    _ => -width,
+                };
+                ((v as i64 + delta).rem_euclid(nv as i64)) as u64
+            }
+        }
+    }
+
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let nv = scale.n(self.vertices, 4096);
+        let step = self.visit_step.max(1);
+        let visited = nv / step;
+        let offsets = layout::SHARED_BASE;
+        let values = offsets + nv as u64 * 8;
+        let frontier = values + (nv * self.value_words) as u64 * 8;
+        chunks(visited, threads)
+            .into_iter()
+            .enumerate()
+            .map(|(tid, (start, len))| {
+                let mut rng = Xoshiro256::new(self.seed ^ (tid as u64).wrapping_mul(0x9E37));
+                let mut t = Vec::with_capacity(len * (self.degree + 2));
+                for vi in start..start + len {
+                    let v = (vi * step) % nv;
+                    // Degree: power-law for rMat, ~4 for grid.
+                    let deg = match self.input {
+                        GraphInput::RMat => {
+                            let d = rng.gen_zipf(4 * self.degree, 0.9) + 1;
+                            d.min(4 * self.degree)
+                        }
+                        GraphInput::Usa => 4,
+                    };
+                    match self.mode {
+                        TraversalMode::Dense => {
+                            // Sequential offset read for this vertex.
+                            t.push(Access::load(offsets + v as u64 * 8, 1, 1).in_bb(1));
+                            for e in 0..deg {
+                                let u = self.neighbor(v, e, nv, &mut rng);
+                                // Gather neighbor value (independent).
+                                t.push(
+                                    Access::load(
+                                        values + u * (self.value_words as u64) * 8,
+                                        1,
+                                        1,
+                                    )
+                                    .in_bb(2),
+                                );
+                            }
+                            // Accumulate into own value (hot during loop).
+                            t.push(
+                                Access::store(
+                                    values + v as u64 * (self.value_words as u64) * 8,
+                                    1,
+                                    2,
+                                )
+                                .in_bb(3),
+                            );
+                        }
+                        TraversalMode::Sparse => {
+                            // Scattered frontier read.
+                            let fv = mix64(v as u64 ^ self.seed) % nv as u64;
+                            t.push(Access::load(frontier + fv * 8, 1, 1).in_bb(1));
+                            let next_frontier = frontier + nv as u64 * 8;
+                            for e in 0..deg {
+                                let u = self.neighbor(fv as usize, e, nv, &mut rng);
+                                let va = values + u * (self.value_words as u64) * 8;
+                                // Read the neighbor value; conditionally
+                                // mark it in the next frontier (as Ligra's
+                                // edgeMapSparse does) — a distinct array,
+                                // so no word-level repeats.
+                                t.push(Access::load(va, 1, 1).in_bb(2));
+                                if e % 2 == 0 {
+                                    t.push(Access::store(next_frontier + u * 8, 0, 1).in_bb(2));
+                                }
+                            }
+                        }
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, CoreModel, SystemConfig};
+
+    fn pagerank_rmat() -> GraphTraversal {
+        GraphTraversal {
+            input: GraphInput::RMat,
+            mode: TraversalMode::Dense,
+            vertices: 1_600_000, // 12.8 MiB value array: exceeds the LLC
+            visit_step: 4,
+            degree: 4,
+            value_words: 1,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn rmat_dense_is_class1a_irregular() {
+        let g = pagerank_rmat();
+        let r = simulate(
+            &SystemConfig::host(4, CoreModel::OutOfOrder),
+            &g.trace(4, Scale(1.0)),
+        );
+        assert!(r.mpki > 5.0, "mpki={}", r.mpki);
+        assert!(r.lfmr > 0.3, "lfmr={}", r.lfmr);
+    }
+
+    /// Median |stride| between consecutive *gather* accesses (bb == 2).
+    fn median_gather_stride(g: &GraphTraversal) -> u64 {
+        let t = g.trace(1, Scale(1.0));
+        let gathers: Vec<u64> = t[0].iter().filter(|a| a.bb == 2).map(|a| a.addr).collect();
+        let mut ds: Vec<u64> = gathers.windows(2).map(|w| w[0].abs_diff(w[1])).collect();
+        ds.sort_unstable();
+        ds[ds.len() / 2]
+    }
+
+    #[test]
+    fn usa_gathers_are_more_local_than_rmat() {
+        let usa = GraphTraversal {
+            input: GraphInput::Usa,
+            mode: TraversalMode::Dense,
+            vertices: 400_000,
+            visit_step: 2,
+            degree: 4,
+            value_words: 1,
+            seed: 1,
+        };
+        let usa_stride = median_gather_stride(&usa);
+        let rmat_stride = median_gather_stride(&pagerank_rmat());
+        assert!(
+            usa_stride * 10 < rmat_stride,
+            "usa={usa_stride} rmat={rmat_stride}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = pagerank_rmat();
+        assert_eq!(g.trace(2, Scale(0.2)), g.trace(2, Scale(0.2)));
+    }
+
+    #[test]
+    fn sparse_mode_has_rmw_stores() {
+        let g = GraphTraversal {
+            input: GraphInput::RMat,
+            mode: TraversalMode::Sparse,
+            vertices: 50_000,
+            visit_step: 1,
+            degree: 4,
+            value_words: 1,
+            seed: 9,
+        };
+        let t = g.trace(1, Scale(1.0));
+        let stores = t[0].iter().filter(|a| a.write).count();
+        assert!(stores > t[0].len() / 10);
+    }
+
+    #[test]
+    fn power_law_degrees_for_rmat() {
+        let g = pagerank_rmat();
+        let t = g.trace(1, Scale(0.5));
+        // bb=1 marks one offset read per vertex; bb=2 marks gathers. The
+        // gather/vertex ratio should exceed the grid's uniform 4 spread
+        // (power law has a heavy tail but median ~1-2); just check both
+        // tags are present and gathers dominate.
+        let offsets = t[0].iter().filter(|a| a.bb == 1).count();
+        let gathers = t[0].iter().filter(|a| a.bb == 2).count();
+        assert!(offsets > 0 && gathers > offsets);
+    }
+}

@@ -1,0 +1,176 @@
+//! Class-1b (DRAM-latency-bound) families: low MPKI — the memory rate is
+//! throttled by computation between accesses — but LFMR ≈ 1, so every
+//! access that does happen pays the full DRAM round trip, which lands on
+//! the critical path.
+//!
+//! * [`RandomRmw`] — Chai `Histogram`-style: compute a bin (tens of
+//!   instructions), then RMW a random slot of a DRAM-sized table.
+//! * [`PointerChase`] — linked-structure walk (the paper's `PLYalu` /
+//!   hardware-effects dependent chain): each load's *address* depends on
+//!   the previous load, so no MLP exists at any core width.
+
+use super::{chunks, layout, Scale};
+use crate::sim::{Access, Trace};
+use crate::util::rng::{mix64, Xoshiro256};
+
+// (mix64 is used by RandomRmw's deterministic slot hashing.)
+
+#[derive(Debug, Clone)]
+pub struct RandomRmw {
+    /// Table elements (16 B each).
+    pub table_elems: usize,
+    /// Total updates.
+    pub updates: usize,
+    /// Instructions of computation per update (keeps MPKI low).
+    pub gap: u16,
+    /// Arithmetic ops attributed per update.
+    pub ops: u16,
+    pub seed: u64,
+}
+
+impl RandomRmw {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let table = scale.n(self.table_elems, 8192);
+        let updates = scale.n(self.updates, 2048);
+        let input = layout::SHARED_BASE;
+        let bins = layout::SHARED_BASE + (2u64 << 30);
+        chunks(updates, threads)
+            .into_iter()
+            .map(|(start, len)| {
+                let mut t = Vec::with_capacity(len * 3);
+                for i in start..start + len {
+                    // Sequential input scan (pixels/records) — L1-friendly.
+                    t.push(Access::load(input + i as u64 * 8, self.gap / 2, self.ops / 2).in_bb(1));
+                    let slot = mix64(i as u64 ^ self.seed) % table as u64;
+                    let addr = bins + slot * 16;
+                    // Read the bucket header word, write the payload word
+                    // (same cache line, distinct words — the update has no
+                    // word-level repeat, matching the paper's low temporal
+                    // locality for this class).
+                    t.push(Access::load(addr, self.gap / 2, self.ops / 2).in_bb(2));
+                    t.push(Access::store(addr + 8, 1, 1).in_bb(2));
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PointerChase {
+    /// Nodes in the linked structure (64 B apart — one per line).
+    pub nodes: usize,
+    /// Total hops walked.
+    pub hops: usize,
+    /// Instructions between hops.
+    pub gap: u16,
+    pub ops: u16,
+    pub seed: u64,
+}
+
+impl PointerChase {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let nodes = scale.n(self.nodes, 8192);
+        let hops = scale.n(self.hops, 2048);
+        chunks(hops, threads)
+            .into_iter()
+            .enumerate()
+            .map(|(tid, (_, len))| {
+                // Each thread walks its own pseudo-random cycle through a
+                // private region (threads do not share the structure —
+                // matches pointer-chasing microbenchmarks).
+                let base = layout::private_base(tid);
+                let mut rng = Xoshiro256::new(self.seed ^ tid as u64);
+                let mut t = Vec::with_capacity(len);
+                for _ in 0..len {
+                    // A fresh uniform node per hop models a walk over a
+                    // full-cycle random permutation (no short cycles) —
+                    // `dep` still serializes the loads in the core model.
+                    let cur = rng.gen_range(nodes as u64);
+                    t.push(Access::load_dep(base + cur * 64, self.gap, self.ops).in_bb(1));
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, CoreModel, SystemConfig};
+
+    #[test]
+    fn random_rmw_is_1b_shaped() {
+        let k = RandomRmw {
+            table_elems: 1 << 22, // 64 MiB
+            updates: 40_000,
+            gap: 120,
+            ops: 4,
+            seed: 5,
+        };
+        let host = simulate(
+            &SystemConfig::host(4, CoreModel::OutOfOrder),
+            &k.trace(4, Scale(1.0)),
+        );
+        assert!(host.mpki < 11.0, "mpki={}", host.mpki);
+        assert!(host.lfmr > 0.7, "lfmr={}", host.lfmr);
+        assert!(host.dram_rho < 0.6, "rho={}", host.dram_rho);
+        // NDP wins on latency (paper: 1.1-1.2x).
+        let ndp = simulate(
+            &SystemConfig::ndp(4, CoreModel::OutOfOrder),
+            &k.trace(4, Scale(1.0)),
+        );
+        assert!(ndp.perf() > host.perf());
+    }
+
+    #[test]
+    fn chase_is_fully_dependent() {
+        let k = PointerChase {
+            nodes: 1 << 20,
+            hops: 20_000,
+            gap: 10,
+            ops: 2,
+            seed: 1,
+        };
+        let t = k.trace(2, Scale(1.0));
+        assert!(t[0].iter().all(|a| a.dep && !a.write));
+        let host = simulate(&SystemConfig::host(2, CoreModel::OutOfOrder), &t);
+        // AMAT dominated by DRAM.
+        assert!(host.amat_parts[3] > host.amat_parts[0]);
+        assert!(host.memory_bound > 0.6, "mb={}", host.memory_bound);
+    }
+
+    #[test]
+    fn ndp_cuts_chase_amat() {
+        let k = PointerChase {
+            nodes: 1 << 20,
+            hops: 20_000,
+            gap: 10,
+            ops: 2,
+            seed: 1,
+        };
+        let host = simulate(
+            &SystemConfig::host(2, CoreModel::OutOfOrder),
+            &k.trace(2, Scale(1.0)),
+        );
+        let ndp = simulate(
+            &SystemConfig::ndp(2, CoreModel::OutOfOrder),
+            &k.trace(2, Scale(1.0)),
+        );
+        assert!(ndp.amat < host.amat, "ndp={} host={}", ndp.amat, host.amat);
+        assert!(ndp.perf() > host.perf());
+    }
+
+    #[test]
+    fn deterministic() {
+        let k = PointerChase {
+            nodes: 4096,
+            hops: 5000,
+            gap: 5,
+            ops: 1,
+            seed: 2,
+        };
+        assert_eq!(k.trace(3, Scale(1.0)), k.trace(3, Scale(1.0)));
+    }
+}

@@ -1,0 +1,256 @@
+//! The DAMOV benchmark suite: deterministic trace generators reproducing
+//! the memory access patterns of the paper's representative functions.
+//!
+//! Each *function* (paper terminology: a memory-bound function inside an
+//! application) is described by a [`FunctionSpec`]: identity (suite /
+//! application / function / input set, mirroring Appendix A), the paper's
+//! bottleneck-class label for the 44 representatives, and a [`Kernel`] —
+//! a parametric access-pattern generator. Generators:
+//!
+//! * are **deterministic** (seeded xoshiro256**) — the same spec always
+//!   yields the same trace;
+//! * **strong-scale**: total work is fixed and partitioned across the
+//!   simulated cores, as in the paper's scalability sweep;
+//! * emit **word-granularity** accesses so the architecture-independent
+//!   locality metrics of Step 2 (computed at word granularity, §2.3) see
+//!   the true access stream;
+//! * tag accesses with static basic-block ids (`Access::bb`) so case
+//!   study 4 can attribute LLC misses to basic blocks.
+//!
+//! See DESIGN.md §4 for the mapping from each paper function to its
+//! generator family and the argument for pattern fidelity.
+
+pub mod compute;
+pub mod contention;
+pub mod graph;
+pub mod hashjoin;
+pub mod l1bound;
+pub mod latency;
+pub mod partition;
+pub mod registry;
+pub mod stencil;
+pub mod stream;
+
+use crate::sim::Trace;
+
+/// Global size multiplier. `Scale(1.0)` is the evaluation scale used for
+/// the paper reproduction; tests use small scales for speed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn full() -> Scale {
+        Scale(1.0)
+    }
+
+    pub fn tiny() -> Scale {
+        Scale(0.05)
+    }
+
+    /// Scale an element/byte count, keeping it at least `min`.
+    pub fn n(&self, base: usize, min: usize) -> usize {
+        ((base as f64 * self.0) as usize).max(min)
+    }
+}
+
+/// Identity of a benchmark function (Appendix A columns).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FunctionId {
+    pub suite: &'static str,
+    pub app: &'static str,
+    pub function: &'static str,
+    /// Input set tag (e.g. "rMat", "USA", "ref", "small").
+    pub input: String,
+}
+
+impl FunctionId {
+    /// Short code used throughout the paper's figures (e.g. `LIGPrkEmd`).
+    pub fn code(&self) -> String {
+        format!("{}{}", self.app, self.function)
+    }
+}
+
+/// A function in the suite: identity + expected class + generator.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub id: FunctionId,
+    /// Paper bottleneck class ("1a".."2c") for the 44 representatives;
+    /// `None` for held-out validation variants (their class is predicted
+    /// by the classifier and then checked against the family's label).
+    pub paper_class: Option<&'static str>,
+    /// The class of the generator *family* (ground truth for validation).
+    pub family_class: &'static str,
+    pub kernel: Kernel,
+    /// True for the 44 representative functions (Table 8).
+    pub representative: bool,
+}
+
+impl FunctionSpec {
+    /// Generate the multi-threaded trace for `threads` cores.
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        self.kernel.trace(threads, scale)
+    }
+
+    /// Single-thread trace for the architecture-independent Step-2
+    /// locality analysis (paper: single-thread memory trace).
+    pub fn locality_trace(&self, scale: Scale) -> Vec<crate::sim::Access> {
+        self.kernel.trace(1, scale).pop().unwrap()
+    }
+}
+
+/// Parametric generator families (DESIGN.md §4). Every paper function is
+/// an instance of one of these with specific sizes/rates.
+#[derive(Debug, Clone)]
+pub enum Kernel {
+    /// STREAM-style array sweeps (1a regular).
+    Stream(stream::StreamKernel),
+    /// Streaming GEMM with negligible reuse (1a regular, DRKYolo).
+    GemmStream(stream::GemmStream),
+    /// Hash-join probe: sequential keys + random table reads (1a irregular).
+    HashProbe(hashjoin::HashProbe),
+    /// Hash-join build: random RMW at low rate (1b).
+    HashBuild(hashjoin::HashBuild),
+    /// Graph traversal over rMat or grid graphs (1a irregular).
+    Graph(graph::GraphTraversal),
+    /// Jacobi-style stencil sweeps (1a regular).
+    Stencil(stencil::Stencil),
+    /// Sparse random RMW over a huge table, compute-heavy gaps (1b).
+    RandomRmw(latency::RandomRmw),
+    /// Dependent pointer chase (1b).
+    PointerChase(latency::PointerChase),
+    /// Repeated passes over per-thread partitions (1c).
+    PartitionedPass(partition::PartitionedPass),
+    /// Hot per-thread block with RMW reuse; aggregate overwhelms L3 at
+    /// high core counts (2a).
+    SharedHotRmw(contention::SharedHotRmw),
+    /// Hot L1-resident vectors + shared L3-resident matrix stream (2b).
+    StreamPlusHot(l1bound::StreamPlusHot),
+    /// Cache-blocked high-AI compute (2c).
+    BlockedCompute(compute::BlockedCompute),
+}
+
+impl Kernel {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        match self {
+            Kernel::Stream(k) => k.trace(threads, scale),
+            Kernel::GemmStream(k) => k.trace(threads, scale),
+            Kernel::HashProbe(k) => k.trace(threads, scale),
+            Kernel::HashBuild(k) => k.trace(threads, scale),
+            Kernel::Graph(k) => k.trace(threads, scale),
+            Kernel::Stencil(k) => k.trace(threads, scale),
+            Kernel::RandomRmw(k) => k.trace(threads, scale),
+            Kernel::PointerChase(k) => k.trace(threads, scale),
+            Kernel::PartitionedPass(k) => k.trace(threads, scale),
+            Kernel::SharedHotRmw(k) => k.trace(threads, scale),
+            Kernel::StreamPlusHot(k) => k.trace(threads, scale),
+            Kernel::BlockedCompute(k) => k.trace(threads, scale),
+        }
+    }
+
+    /// Dataflow summary for the accelerator case study (§5.2), where
+    /// meaningful for the family.
+    pub fn dataflow(&self) -> Option<crate::sim::accel::KernelDataflow> {
+        use crate::sim::accel::KernelDataflow;
+        match self {
+            Kernel::GemmStream(k) => Some(KernelDataflow {
+                // Per 8-word block of the B sweep: one B line + one C
+                // update (16 B amortized), ~1.2 ops after the MAC tree
+                // folds into the accelerator datapath.
+                ops_per_elem: 1.2,
+                chain_depth: 8.0,
+                bytes_per_elem: 16.0,
+                elems: (k.m * k.n * k.k) as f64 / 8.0,
+                latency_bound_frac: 0.0,
+            }),
+            Kernel::RandomRmw(k) => Some(KernelDataflow {
+                ops_per_elem: k.ops as f64 + 2.0,
+                chain_depth: 4.0,
+                bytes_per_elem: 16.0,
+                elems: k.updates as f64,
+                latency_bound_frac: 0.7,
+            }),
+            Kernel::PointerChase(k) => Some(KernelDataflow {
+                ops_per_elem: k.ops as f64 + 2.0,
+                chain_depth: 2.0,
+                bytes_per_elem: 8.0,
+                elems: k.hops as f64,
+                latency_bound_frac: 0.5,
+            }),
+            Kernel::BlockedCompute(k) => Some(KernelDataflow {
+                ops_per_elem: k.ops as f64,
+                chain_depth: 8.0,
+                bytes_per_elem: 0.5,
+                elems: k.iters as f64,
+                latency_bound_frac: 0.0,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Memory-layout constants shared by all generators: private regions are
+/// spaced far apart; shared structures live in a common arena.
+pub mod layout {
+    /// Base of the shared arena (graph data, shared matrices...).
+    pub const SHARED_BASE: u64 = 0x1000_0000;
+    /// Base of thread-private arenas.
+    pub const PRIVATE_BASE: u64 = 0x10_0000_0000;
+    /// Stride between thread-private arenas (256 MiB).
+    pub const PRIVATE_STRIDE: u64 = 0x1000_0000;
+
+    pub fn private_base(thread: usize) -> u64 {
+        PRIVATE_BASE + thread as u64 * PRIVATE_STRIDE
+    }
+}
+
+/// Split `total` units of work into per-thread (start, len) chunks.
+pub fn chunks(total: usize, threads: usize) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    let per = total / threads;
+    let rem = total % threads;
+    let mut out = Vec::with_capacity(threads);
+    let mut start = 0;
+    for t in 0..threads {
+        let len = per + usize::from(t < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        crate::util::prop::check(100, |rng| {
+            let total = rng.gen_usize(0, 10_000);
+            let threads = rng.gen_usize(1, 300);
+            let ch = chunks(total, threads);
+            assert_eq!(ch.len(), threads);
+            let sum: usize = ch.iter().map(|c| c.1).sum();
+            assert_eq!(sum, total);
+            // Contiguous and ordered.
+            let mut pos = 0;
+            for (s, l) in ch {
+                assert_eq!(s, pos);
+                pos += l;
+            }
+        });
+    }
+
+    #[test]
+    fn scale_respects_min() {
+        assert_eq!(Scale(0.001).n(1000, 64), 64);
+        assert_eq!(Scale(2.0).n(1000, 64), 2000);
+    }
+
+    #[test]
+    fn private_bases_disjoint() {
+        let a = layout::private_base(0);
+        let b = layout::private_base(1);
+        assert!(b - a >= layout::PRIVATE_STRIDE);
+        assert!(a > layout::SHARED_BASE + (1 << 30));
+    }
+}

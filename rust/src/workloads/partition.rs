@@ -1,0 +1,123 @@
+//! Class-1c family: bottlenecked by **private L1/L2 capacity**.
+//!
+//! The defining behavior (paper §3.3.3): the total working set is fixed
+//! and partitioned across threads, and each thread makes repeated passes
+//! over its partition. At low core counts a partition dwarfs the private
+//! caches (LFMR high → behaves like class 1b and NDP wins); as cores
+//! scale, per-thread partitions shrink into the growing aggregate L1/L2
+//! and LFMR *decreases* — the host overtakes NDP (DRKRes, PRSFlu).
+//!
+//! Reuse distance equals the partition size, far beyond the Step-2
+//! window (32 refs), so the architecture-independent *temporal locality
+//! metric stays low* even though architectural reuse exists — exactly
+//! the paper's point about this class.
+
+use super::{chunks, layout, Scale};
+use crate::sim::{Access, Trace};
+
+#[derive(Debug, Clone)]
+pub struct PartitionedPass {
+    /// Total working set in words (8 B each), split across threads.
+    pub total_words: usize,
+    /// Sequential passes each thread makes over its partition.
+    pub passes: usize,
+    /// Stride in words between consecutive touches (1 = fully sequential;
+    /// 8 = one word per line — defeats spatial locality in L1).
+    pub stride_words: usize,
+    pub gap: u16,
+    pub ops: u16,
+}
+
+impl PartitionedPass {
+    pub fn trace(&self, threads: usize, scale: Scale) -> Trace {
+        let total = scale.n(self.total_words, 16 * 1024);
+        chunks(total, threads)
+            .into_iter()
+            .map(|(start, len)| {
+                // The partition is a contiguous slice of the shared arena —
+                // shrinking per-thread as thread count grows.
+                let base = layout::SHARED_BASE + start as u64 * 8;
+                let mut t = Vec::with_capacity(len * self.passes / self.stride_words + 1);
+                for _ in 0..self.passes {
+                    let mut i = 0usize;
+                    while i < len {
+                        t.push(Access::load(base + i as u64 * 8, self.gap, self.ops).in_bb(1));
+                        // Light update pass every 4th touch (next word of
+                        // the same line: no word-level repeat).
+                        if (i / self.stride_words) % 4 == 0 && i + 1 < len {
+                            t.push(Access::store(base + (i as u64 + 1) * 8, 1, 1).in_bb(2));
+                        }
+                        i += self.stride_words;
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, CoreModel, SystemConfig};
+
+    fn kernel() -> PartitionedPass {
+        PartitionedPass {
+            total_words: 3 << 19, // 12 MiB total: exceeds the 8 MiB L3 at
+            // 1 core; per-thread slice (192 KiB) fits private L2 by 64 cores
+            passes: 6,
+            stride_words: 8,
+            gap: 10,
+            ops: 4,
+        }
+    }
+
+    #[test]
+    fn lfmr_decreases_with_core_count() {
+        let k = kernel();
+        let lfmr_at = |cores: usize| {
+            simulate(
+                &SystemConfig::host(cores, CoreModel::OutOfOrder),
+                &k.trace(cores, Scale(1.0)),
+            )
+            .lfmr
+        };
+        let low = lfmr_at(1);
+        let high = lfmr_at(64);
+        assert!(
+            low > high + 0.3,
+            "lfmr should fall with cores: 1c={low} 64c={high}"
+        );
+    }
+
+    #[test]
+    fn ndp_wins_low_cores_host_wins_high_cores() {
+        let k = kernel();
+        let perf = |cores: usize, ndp: bool| {
+            let cfg = if ndp {
+                SystemConfig::ndp(cores, CoreModel::OutOfOrder)
+            } else {
+                SystemConfig::host(cores, CoreModel::OutOfOrder)
+            };
+            simulate(&cfg, &k.trace(cores, Scale(1.0))).perf()
+        };
+        assert!(perf(1, true) > perf(1, false), "NDP should win at 1 core");
+        assert!(
+            perf(64, false) > perf(64, true),
+            "host should win at 64 cores"
+        );
+    }
+
+    #[test]
+    fn deterministic_and_partitioned() {
+        let k = kernel();
+        let t = k.trace(4, Scale(0.1));
+        assert_eq!(t, k.trace(4, Scale(0.1)));
+        // Partitions are disjoint address ranges.
+        for w in t.windows(2) {
+            let max0 = w[0].iter().map(|a| a.addr).max().unwrap();
+            let min1 = w[1].iter().map(|a| a.addr).min().unwrap();
+            assert!(min1 > max0);
+        }
+    }
+}

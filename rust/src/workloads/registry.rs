@@ -1,0 +1,508 @@
+//! The DAMOV function registry: the 44 representative functions of
+//! Table 8 (by paper code name) and the 100 held-out input/size variants
+//! that mirror the paper's §3.5 validation set, for 144 functions total.
+//!
+//! Representative functions carry their paper class; variants carry only
+//! their generator family's class (used as ground truth when measuring
+//! classification accuracy).
+
+use super::compute::BlockedCompute;
+use super::contention::SharedHotRmw;
+use super::graph::{GraphInput, GraphTraversal, TraversalMode};
+use super::hashjoin::{HashBuild, HashProbe};
+use super::l1bound::StreamPlusHot;
+use super::latency::{PointerChase, RandomRmw};
+use super::partition::PartitionedPass;
+use super::stencil::Stencil;
+use super::stream::{GemmStream, StreamKernel, StreamOp};
+use super::{FunctionId, FunctionSpec, Kernel};
+
+fn spec(
+    suite: &'static str,
+    app: &'static str,
+    function: &'static str,
+    input: &str,
+    class: &'static str,
+    kernel: Kernel,
+) -> FunctionSpec {
+    FunctionSpec {
+        id: FunctionId {
+            suite,
+            app,
+            function,
+            input: input.to_string(),
+        },
+        paper_class: Some(class),
+        family_class: class,
+        kernel,
+        representative: true,
+    }
+}
+
+fn graph(input: GraphInput, mode: TraversalMode, vertices: usize, seed: u64) -> Kernel {
+    Kernel::Graph(GraphTraversal {
+        input,
+        mode,
+        vertices,
+        visit_step: 4,
+        degree: 4,
+        value_words: 1,
+        seed,
+    })
+}
+
+/// The 44 representative functions (Table 8). Codes match the paper's
+/// figures (e.g. `LIGPrkEmd` = Ligra PageRank edgeMapDense).
+pub fn representatives() -> Vec<FunctionSpec> {
+    use GraphInput::*;
+    use TraversalMode::*;
+    let mut v = Vec::new();
+
+    // ---- Class 1a: DRAM bandwidth-bound (12) ----
+    for (name, op) in [
+        ("Add", StreamOp::Add),
+        ("Cpy", StreamOp::Copy),
+        ("Sca", StreamOp::Scale),
+        ("Triad", StreamOp::Triad),
+    ] {
+        v.push(spec(
+            "STREAM",
+            "STR",
+            name,
+            "50000000",
+            "1a",
+            Kernel::Stream(StreamKernel::new(op, 160_000)),
+        ));
+    }
+    v.push(spec(
+        "Darknet",
+        "DRK",
+        "Yolo",
+        "ref",
+        "1a",
+        Kernel::GemmStream(GemmStream {
+            // B (k x n doubles = 9.4 MiB) exceeds the 8 MiB LLC, so the
+            // repeated B sweep streams from DRAM (the 1a invariant).
+            m: 8,
+            n: 24576,
+            k: 48,
+        }),
+    ));
+    v.push(spec(
+        "Hashjoin",
+        "HSJ",
+        "NPO",
+        "r12.8M-s12M",
+        "1a",
+        Kernel::HashProbe(HashProbe {
+            table_elems: 1 << 20,
+            probes: 150_000,
+            gap: 2,
+            seed: 12345,
+        }),
+    ));
+    v.push(spec(
+        "Ligra",
+        "LIG",
+        "CompEms",
+        "USA",
+        "1a",
+        graph(Usa, Sparse, 1_600_000, 21),
+    ));
+    v.push(spec(
+        "Ligra",
+        "LIG",
+        "PrkEmd",
+        "USA",
+        "1a",
+        graph(Usa, Dense, 1_600_000, 22),
+    ));
+    v.push(spec(
+        "Ligra",
+        "LIG",
+        "TriEmd",
+        "rMat",
+        "1a",
+        graph(RMat, Dense, 1_600_000, 23),
+    ));
+    v.push(spec(
+        "Ligra",
+        "LIG",
+        "RadiEms",
+        "USA",
+        "1a",
+        graph(Usa, Sparse, 1_600_000, 24),
+    ));
+    v.push(spec(
+        "Ligra",
+        "LIG",
+        "KcrEms",
+        "rMat",
+        "1a",
+        graph(RMat, Sparse, 1_600_000, 25),
+    ));
+    v.push(spec(
+        "SPLASH-2",
+        "SPL",
+        "OcpRelax",
+        "simlarge",
+        "1a",
+        Kernel::Stencil(Stencil {
+            width: 2048,
+            height: 256,
+            passes: 1,
+        }),
+    ));
+
+    // ---- Class 1b: DRAM latency-bound (5) ----
+    v.push(spec(
+        "Chai",
+        "CHA",
+        "Hsti",
+        "ref",
+        "1b",
+        Kernel::RandomRmw(RandomRmw {
+            table_elems: 1 << 22,
+            updates: 60_000,
+            gap: 120,
+            ops: 4,
+            seed: 31,
+        }),
+    ));
+    v.push(spec(
+        "PolyBench",
+        "PLY",
+        "alu",
+        "ref",
+        "1b",
+        Kernel::PointerChase(PointerChase {
+            nodes: 1 << 20,
+            hops: 40_000,
+            gap: 48,
+            ops: 2,
+            seed: 32,
+        }),
+    ));
+    v.push(spec(
+        "Hashjoin",
+        "HSJ",
+        "PRH",
+        "r12.8M-s12M",
+        "1b",
+        Kernel::HashBuild(HashBuild {
+            table_elems: 1 << 22,
+            inserts: 60_000,
+            gap: 100,
+            seed: 33,
+        }),
+    ));
+    v.push(spec(
+        "Chai",
+        "CHA",
+        "Sel",
+        "ref",
+        "1b",
+        Kernel::RandomRmw(RandomRmw {
+            table_elems: 1 << 21,
+            updates: 50_000,
+            gap: 100,
+            ops: 3,
+            seed: 34,
+        }),
+    ));
+    v.push(spec(
+        "Phoenix",
+        "PHE",
+        "StrM",
+        "keys",
+        "1b",
+        Kernel::PointerChase(PointerChase {
+            nodes: 1 << 19,
+            hops: 40_000,
+            gap: 60,
+            ops: 3,
+            seed: 35,
+        }),
+    ));
+
+    // ---- Class 1c: L1/L2 cache-capacity-bound (5) ----
+    let onec = |total_words: usize, passes: usize, gap: u16, ops: u16| {
+        Kernel::PartitionedPass(PartitionedPass {
+            total_words,
+            passes,
+            stride_words: 8,
+            gap,
+            ops,
+        })
+    };
+    // The large gaps keep reference-point MPKI low (the class is defined
+    // by decreasing LFMR, not memory intensity; paper Fig 4).
+    v.push(spec("Darknet", "DRK", "Res", "ref", "1c", onec(3 << 19, 6, 30, 6)));
+    v.push(spec("PARSEC", "PRS", "Flu", "simlarge", "1c", onec(2 << 20, 4, 34, 7)));
+    v.push(spec("Parboil", "PAR", "Spmv", "large", "1c", onec(3 << 19, 6, 28, 5)));
+    v.push(spec("Rodinia", "ROD", "Bp", "ref", "1c", onec(5 << 18, 7, 36, 8)));
+    v.push(spec("Phoenix", "PHE", "Hist", "large", "1c", onec(3 << 19, 5, 32, 6)));
+
+    // ---- Class 2a: L3-contention-bound (5) ----
+    let twoa = |block_words: usize, passes: usize, gap: u16, seed: u64| {
+        Kernel::SharedHotRmw(SharedHotRmw {
+            block_words,
+            stride_words: 8,
+            total_passes: passes,
+            gap,
+            seed,
+        })
+    };
+    v.push(spec("PolyBench", "PLY", "GramSch", "ref", "2a", twoa(64 * 1024, 96, 4, 51)));
+    v.push(spec("SPLASH-2", "SPL", "FftRev", "simlarge", "2a", twoa(56 * 1024, 104, 4, 52)));
+    v.push(spec("SPLASH-2", "SPL", "OcpSlave", "simlarge", "2a", twoa(80 * 1024, 80, 5, 53)));
+    v.push(spec("SPLASH-2", "SPL", "Radix", "simlarge", "2a", twoa(48 * 1024, 120, 4, 54)));
+    v.push(spec("Rodinia", "ROD", "Srad", "ref", "2a", twoa(72 * 1024, 88, 5, 55)));
+
+    // ---- Class 2b: L1-capacity-bound (6) ----
+    let twob = |big_words: usize, med_words: usize, hot: usize, rmw: usize, gap: u16| {
+        Kernel::StreamPlusHot(StreamPlusHot {
+            big_words,
+            med_words,
+            hot_words: hot,
+            rmw_per_mille: rmw,
+            gap,
+        })
+    };
+    v.push(spec("PolyBench", "PLY", "gemver", "2048", "2b", twob(2 << 20, 256 * 1024, 8, 250, 5)));
+    v.push(spec("PolyBench", "PLY", "mvt", "2048", "2b", twob(2 << 20, 224 * 1024, 8, 200, 5)));
+    v.push(spec("PolyBench", "PLY", "bicg", "2048", "2b", twob(3 << 19, 192 * 1024, 8, 300, 5)));
+    v.push(spec("PolyBench", "PLY", "atax", "2048", "2b", twob(3 << 19, 160 * 1024, 8, 220, 5)));
+    v.push(spec("SPLASH-2", "SPL", "Lucb", "simlarge", "2b", twob(2 << 20, 256 * 1024, 16, 150, 6)));
+    v.push(spec("SPLASH-2", "SPL", "Lunc", "simlarge", "2b", twob(3 << 19, 224 * 1024, 16, 180, 6)));
+
+    // ---- Class 2c: compute-bound (11) ----
+    let twoc = |block_words: usize, iters: usize, ops: u16, gap: u16| {
+        Kernel::BlockedCompute(BlockedCompute {
+            block_words,
+            iters,
+            ops,
+            gap,
+        })
+    };
+    v.push(spec("HPCG", "HPG", "Spm", "104", "2c", twoc(12 * 1024, 256, 8, 4)));
+    v.push(spec("Rodinia", "ROD", "Nw", "ref", "2c", twoc(10 * 1024, 288, 6, 4)));
+    v.push(spec("PolyBench", "PLY", "3mm", "1024", "2c", twoc(12 * 1024, 256, 10, 3)));
+    v.push(spec("PolyBench", "PLY", "2mm", "1024", "2c", twoc(12 * 1024, 240, 10, 3)));
+    v.push(spec("PolyBench", "PLY", "Symm", "1024", "2c", twoc(14 * 1024, 224, 9, 3)));
+    v.push(spec("PolyBench", "PLY", "Doitgen", "1024", "2c", twoc(11 * 1024, 256, 8, 4)));
+    v.push(spec("PolyBench", "PLY", "Gemm", "1024", "2c", twoc(12 * 1024, 256, 11, 3)));
+    v.push(spec("PolyBench", "PLY", "Trmm", "1024", "2c", twoc(10 * 1024, 256, 9, 3)));
+    v.push(spec("Darknet", "DRK", "Cnn", "ref", "2c", twoc(12 * 1024, 224, 12, 4)));
+    v.push(spec("PARSEC", "PRS", "Blk", "simlarge", "2c", twoc(8 * 1024, 320, 10, 4)));
+    v.push(spec("Rodinia", "ROD", "Lud", "ref", "2c", twoc(12 * 1024, 240, 9, 4)));
+
+    assert_eq!(v.len(), 44, "Table 8 has 44 representative functions");
+    v
+}
+
+/// The 100 held-out validation variants (paper §3.5): every
+/// representative gets input/size/seed variants until the suite totals
+/// 144 functions. Variants keep the family (and hence ground-truth
+/// class) but change sizes by ±2x, seeds, or graph input.
+pub fn validation_variants() -> Vec<FunctionSpec> {
+    let reps = representatives();
+    let mut out = Vec::new();
+    // Two variants per representative (88) + a third for the first 12.
+    for (idx, rep) in reps.iter().enumerate() {
+        let n_variants = if idx < 12 { 3 } else { 2 };
+        for vi in 0..n_variants {
+            let mut s = rep.clone();
+            s.representative = false;
+            s.paper_class = None;
+            s.id.input = format!("{}-v{}", rep.id.input, vi + 1);
+            s.kernel = vary(&rep.kernel, vi as u64 + 1);
+            out.push(s);
+        }
+    }
+    assert_eq!(out.len(), 100);
+    out
+}
+
+/// All 144 functions.
+pub fn all_functions() -> Vec<FunctionSpec> {
+    let mut v = representatives();
+    v.extend(validation_variants());
+    assert_eq!(v.len(), 144);
+    v
+}
+
+/// Look up a function by its figure code (e.g. "LIGPrkEmd").
+pub fn by_code(code: &str) -> Option<FunctionSpec> {
+    all_functions().into_iter().find(|f| f.id.code() == code)
+}
+
+/// Produce a same-family variant: scale sizes by 2^(v mod 3 - 1) in
+/// {0.5, 1, 2}-ish steps, bump seeds, flip graph input.
+fn vary(k: &Kernel, v: u64) -> Kernel {
+    let f = match v % 3 {
+        0 => 0.5,
+        1 => 1.6,
+        _ => 0.75,
+    };
+    let sz = |n: usize| ((n as f64 * f) as usize).max(1024);
+    match k {
+        Kernel::Stream(s) => {
+            let mut s = s.clone();
+            s.elems = sz(s.elems);
+            Kernel::Stream(s)
+        }
+        Kernel::GemmStream(g) => {
+            let mut g = g.clone();
+            // Only grow: shrinking would drop the streamed B matrix into
+            // the LLC and change the bottleneck class.
+            g.n = sz(g.n).max(g.n);
+            g.m = ((g.m as f64 * f) as usize).max(g.m);
+            Kernel::GemmStream(g)
+        }
+        Kernel::HashProbe(h) => {
+            let mut h = h.clone();
+            h.table_elems = sz(h.table_elems);
+            h.seed ^= v.wrapping_mul(0x9E37_79B9);
+            Kernel::HashProbe(h)
+        }
+        Kernel::HashBuild(h) => {
+            let mut h = h.clone();
+            h.table_elems = sz(h.table_elems);
+            h.seed ^= v.wrapping_mul(0x9E37_79B9);
+            Kernel::HashBuild(h)
+        }
+        Kernel::Graph(g) => {
+            let mut g = g.clone();
+            g.vertices = sz(g.vertices);
+            g.seed ^= v;
+            if v % 2 == 0 {
+                g.input = match g.input {
+                    super::graph::GraphInput::RMat => super::graph::GraphInput::Usa,
+                    super::graph::GraphInput::Usa => super::graph::GraphInput::RMat,
+                };
+            }
+            Kernel::Graph(g)
+        }
+        Kernel::Stencil(s) => {
+            let mut s = s.clone();
+            // Keep rows wide enough that three rows exceed L1 at every
+            // core count (the 1a streaming invariant).
+            s.width = sz(s.width).max(2048);
+            Kernel::Stencil(s)
+        }
+        Kernel::RandomRmw(r) => {
+            let mut r = r.clone();
+            r.table_elems = sz(r.table_elems);
+            r.seed ^= v;
+            Kernel::RandomRmw(r)
+        }
+        Kernel::PointerChase(p) => {
+            let mut p = p.clone();
+            p.nodes = sz(p.nodes);
+            p.seed ^= v;
+            Kernel::PointerChase(p)
+        }
+        Kernel::PartitionedPass(p) => {
+            let mut p = p.clone();
+            // The total must stay above the 8 MiB L3 for the class shape.
+            p.total_words = sz(p.total_words).max(5 << 18);
+            Kernel::PartitionedPass(p)
+        }
+        Kernel::SharedHotRmw(s) => {
+            let mut s = s.clone();
+            // Keep the block in the (L2, L3) band that defines the class.
+            s.block_words = ((s.block_words as f64 * f) as usize).clamp(48 * 1024, 256 * 1024);
+            s.seed ^= v;
+            Kernel::SharedHotRmw(s)
+        }
+        Kernel::StreamPlusHot(s) => {
+            let mut s = s.clone();
+            // The big stream must stay > L3 and the medium region <= L3
+            // for the class invariant.
+            s.big_words = ((s.big_words as f64 * f) as usize).max(3 << 19);
+            s.med_words = ((s.med_words as f64 * f) as usize).clamp(64 * 1024, 800 * 1024);
+            Kernel::StreamPlusHot(s)
+        }
+        Kernel::BlockedCompute(b) => {
+            let mut b = b.clone();
+            // Block must stay in (L1, L2].
+            b.block_words = ((b.block_words as f64 * f) as usize).clamp(6 * 1024, 30 * 1024);
+            Kernel::BlockedCompute(b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Scale;
+    use std::collections::HashSet;
+
+    #[test]
+    fn exactly_44_representatives_and_144_total() {
+        assert_eq!(representatives().len(), 44);
+        assert_eq!(all_functions().len(), 144);
+    }
+
+    #[test]
+    fn class_distribution_matches_design() {
+        let reps = representatives();
+        let count = |c: &str| reps.iter().filter(|r| r.family_class == c).count();
+        assert_eq!(count("1a"), 12);
+        assert_eq!(count("1b"), 5);
+        assert_eq!(count("1c"), 5);
+        assert_eq!(count("2a"), 5);
+        assert_eq!(count("2b"), 6);
+        assert_eq!(count("2c"), 11);
+    }
+
+    #[test]
+    fn codes_are_unique() {
+        let mut seen = HashSet::new();
+        for f in all_functions() {
+            let key = (f.id.code(), f.id.input.clone());
+            assert!(seen.insert(key.clone()), "duplicate {key:?}");
+        }
+    }
+
+    #[test]
+    fn lookup_by_code() {
+        assert!(by_code("LIGPrkEmd").is_some());
+        assert!(by_code("STRTriad").is_some());
+        assert!(by_code("NOPE").is_none());
+    }
+
+    #[test]
+    fn every_function_generates_nonempty_traces() {
+        for f in all_functions() {
+            let t = f.trace(2, Scale::tiny());
+            assert_eq!(t.len(), 2, "{}", f.id.code());
+            let total: usize = t.iter().map(Vec::len).sum();
+            assert!(total > 100, "{} produced {} accesses", f.id.code(), total);
+        }
+    }
+
+    #[test]
+    fn variants_share_family_class() {
+        for v in validation_variants() {
+            assert!(v.paper_class.is_none());
+            assert!(!v.representative);
+            assert!(["1a", "1b", "1c", "2a", "2b", "2c"].contains(&v.family_class));
+        }
+    }
+
+    #[test]
+    fn representative_codes_match_paper_figures() {
+        let reps = representatives();
+        let codes: HashSet<String> = reps.iter().map(|r| r.id.code()).collect();
+        for expected in [
+            "STRAdd", "STRCpy", "STRSca", "STRTriad", "HSJNPO", "LIGCompEms", "LIGPrkEmd",
+            "LIGTriEmd", "LIGRadiEms", "LIGKcrEms", "DRKYolo", "CHAHsti", "PLYalu", "HSJPRH",
+            "DRKRes", "PRSFlu", "PLYGramSch", "SPLFftRev", "PLYgemver", "SPLLucb", "HPGSpm",
+            "RODNw", "PLY3mm", "PLYSymm",
+        ] {
+            assert!(codes.contains(expected), "missing {expected}");
+        }
+    }
+}

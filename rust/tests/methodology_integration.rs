@@ -1,0 +1,70 @@
+//! Integration: the full three-step methodology classifies canonical
+//! suite functions into their paper classes using the calibrated
+//! default thresholds (the same ones `damov characterize` applies).
+
+use damov::methodology::classify::{self, Class, Features};
+use damov::methodology::locality;
+use damov::methodology::step3::{profile_function, SweepOptions};
+use damov::workloads::{registry, Scale};
+
+fn thresholds() -> classify::Thresholds {
+    classify::Thresholds {
+        temporal: 0.30,
+        ai: 8.5,
+        mpki: 45.0,
+        lfmr: 0.56,
+        slope_dec: -0.25,
+        slope_inc: 0.25,
+    }
+}
+
+fn classify_code(code: &str, scale: f64) -> (Class, Class) {
+    let spec = registry::by_code(code).expect("function");
+    let profile = profile_function(
+        &spec,
+        SweepOptions {
+            scale: Scale(scale),
+            ..Default::default()
+        },
+    );
+    let loc = locality::locality(&spec.locality_trace(Scale(scale)));
+    let mut feats = Features::of(&profile);
+    feats.temporal = loc.temporal;
+    let predicted = classify::classify(&feats, &thresholds());
+    let expected = Class::parse(spec.family_class).unwrap();
+    (predicted, expected)
+}
+
+#[test]
+fn stream_classifies_as_1a() {
+    let (p, e) = classify_code("STRTriad", 1.0);
+    assert_eq!(p, e, "STRTriad should be 1a");
+}
+
+#[test]
+fn pointer_chase_classifies_as_1b() {
+    let (p, e) = classify_code("PLYalu", 1.0);
+    assert_eq!(p, e, "PLYalu should be 1b");
+}
+
+#[test]
+fn blocked_compute_classifies_as_2c() {
+    let (p, e) = classify_code("PLY3mm", 1.0);
+    assert_eq!(p, e, "PLY3mm should be 2c");
+}
+
+#[test]
+fn contention_kernel_classifies_as_2a() {
+    let (p, e) = classify_code("PLYGramSch", 1.0);
+    assert_eq!(p, e, "PLYGramSch should be 2a");
+}
+
+#[test]
+fn step1_filters_and_orders_memory_boundedness() {
+    // A 1b chase must look *more* memory-bound than a 2c kernel.
+    use damov::methodology::step1;
+    let chase = step1::identify(&registry::by_code("PLYalu").unwrap(), Scale(0.5));
+    let compute = step1::identify(&registry::by_code("PLY3mm").unwrap(), Scale(0.5));
+    assert!(chase.selected && compute.selected);
+    assert!(chase.memory_bound > compute.memory_bound);
+}

@@ -1,0 +1,134 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts, executed through
+//! the PJRT CPU client, must agree with the pure-Rust oracles on real
+//! workload traces. This closes the three-layer loop:
+//! Pallas kernel == jnp ref (pytest) == Rust oracle (here) == artifact.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use damov::methodology::{cluster, locality};
+use damov::runtime::{artifact, Analytics};
+use damov::util::rng::Xoshiro256;
+use damov::workloads::{registry, Scale};
+
+fn load_or_skip() -> Option<Analytics> {
+    if !artifact::artifacts_available() {
+        eprintln!("[skip] artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Analytics::load(&artifact::default_artifact_dir()).expect("loading artifacts"))
+}
+
+#[test]
+fn locality_artifact_matches_rust_on_synthetic_streams() {
+    let Some(an) = load_or_skip() else { return };
+    let cases: Vec<Vec<u64>> = vec![
+        (0..32 * 50).collect(),                         // sequential
+        (0..32 * 50).map(|i| i * 7).collect(),          // strided
+        vec![42; 32 * 50],                              // single address
+        {
+            let mut rng = Xoshiro256::new(1);
+            (0..32 * 200).map(|_| rng.gen_range(1 << 39)).collect()
+        },
+        {
+            // RMW-ish triplets.
+            let mut v = Vec::new();
+            for i in 0..(32 * 40) {
+                v.extend_from_slice(&[i, i, i]);
+            }
+            v
+        },
+    ];
+    for (i, words) in cases.iter().enumerate() {
+        let rust = locality::locality_of_words(words);
+        let pjrt = an.locality_of_words(words).expect("artifact run");
+        assert!(
+            (rust.spatial - pjrt.spatial).abs() < 1e-9,
+            "case {i}: spatial rust={} pjrt={}",
+            rust.spatial,
+            pjrt.spatial
+        );
+        assert!(
+            (rust.temporal - pjrt.temporal).abs() < 1e-9,
+            "case {i}: temporal rust={} pjrt={}",
+            rust.temporal,
+            pjrt.temporal
+        );
+        assert_eq!(rust.windows, pjrt.windows);
+    }
+}
+
+#[test]
+fn locality_artifact_matches_rust_on_workload_traces() {
+    let Some(an) = load_or_skip() else { return };
+    for code in ["STRTriad", "PLYGramSch", "CHAHsti", "LIGPrkEmd", "PLY3mm"] {
+        let spec = registry::by_code(code).unwrap();
+        let trace = spec.locality_trace(Scale::tiny());
+        let rust = locality::locality(&trace);
+        let pjrt = an.locality(&trace).expect("artifact run");
+        assert!(
+            (rust.spatial - pjrt.spatial).abs() < 1e-9,
+            "{code}: spatial rust={} pjrt={}",
+            rust.spatial,
+            pjrt.spatial
+        );
+        assert!(
+            (rust.temporal - pjrt.temporal).abs() < 1e-9,
+            "{code}: temporal rust={} pjrt={}",
+            rust.temporal,
+            pjrt.temporal
+        );
+    }
+}
+
+#[test]
+fn locality_artifact_handles_multi_chunk_traces() {
+    let Some(an) = load_or_skip() else { return };
+    // > CHUNK_WINDOWS (4096) windows => exercises the streaming path.
+    let mut rng = Xoshiro256::new(5);
+    let words: Vec<u64> = (0..32 * 5000).map(|_| rng.gen_range(1 << 30)).collect();
+    let rust = locality::locality_of_words(&words);
+    let pjrt = an.locality_of_words(&words).expect("artifact run");
+    assert_eq!(rust.windows, 5000);
+    assert!((rust.spatial - pjrt.spatial).abs() < 1e-9);
+    assert!((rust.temporal - pjrt.temporal).abs() < 1e-9);
+}
+
+#[test]
+fn kmeans_artifact_matches_rust() {
+    let Some(an) = load_or_skip() else { return };
+    // Two well-separated blobs in 5-D (the classification feature space).
+    let mut rng = Xoshiro256::new(11);
+    let mut points = Vec::new();
+    for _ in 0..22 {
+        points.push((0..5).map(|_| rng.gen_f64() * 0.1).collect::<Vec<f64>>());
+    }
+    for _ in 0..22 {
+        points.push((0..5).map(|_| 0.9 + rng.gen_f64() * 0.1).collect::<Vec<f64>>());
+    }
+    let (rust_assign, _) = cluster::kmeans(&points, 2, 30, 7);
+    let (pjrt_assign, pjrt_centroids) = an.kmeans(&points, 2, 30, 7).expect("kmeans artifact");
+    // Same partition (labels may swap).
+    let same = rust_assign == pjrt_assign
+        || rust_assign
+            .iter()
+            .zip(&pjrt_assign)
+            .all(|(&a, &b)| a == 1 - b);
+    assert!(same, "rust={rust_assign:?} pjrt={pjrt_assign:?}");
+    assert_eq!(pjrt_centroids.len(), 2);
+    assert_eq!(pjrt_centroids[0].len(), 5);
+}
+
+#[test]
+fn kmeans_single_step_matches_rust_assignment() {
+    let Some(an) = load_or_skip() else { return };
+    let mut rng = Xoshiro256::new(3);
+    let points: Vec<Vec<f64>> = (0..44)
+        .map(|_| (0..5).map(|_| rng.gen_f64()).collect())
+        .collect();
+    let centroids: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..5).map(|_| rng.gen_f64()).collect())
+        .collect();
+    let rust_assign = cluster::kmeans_assign(&points, &centroids);
+    let (pjrt_assign, _) = an.kmeans_step(&points, &centroids).expect("step");
+    assert_eq!(rust_assign, pjrt_assign);
+}

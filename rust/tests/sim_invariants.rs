@@ -1,0 +1,193 @@
+//! Property-based invariants of the simulator and coordinator substrate:
+//! randomized workloads/configurations must never violate the physical
+//! and accounting laws the methodology depends on.
+
+use damov::sim::{simulate, Access, CoreModel, SystemConfig, SystemKind};
+use damov::util::prop;
+use damov::util::rng::Xoshiro256;
+
+/// Random but well-formed multi-core trace.
+fn random_trace(rng: &mut Xoshiro256, cores: usize) -> Vec<Vec<Access>> {
+    (0..cores)
+        .map(|c| {
+            let n = rng.gen_usize(50, 3000);
+            let base = 0x1000_0000u64 + c as u64 * (1 << 28);
+            let ws = 1u64 << rng.gen_usize(8, 22); // working set in words
+            (0..n)
+                .map(|_| {
+                    let addr = base + rng.gen_range(ws) * 8;
+                    let gap = rng.gen_range(30) as u16;
+                    let ops = rng.gen_range(8) as u16;
+                    match rng.gen_usize(0, 4) {
+                        0 => Access::store(addr, gap, ops),
+                        1 => Access::load_dep(addr, gap, ops),
+                        _ => Access::load(addr, gap, ops),
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn random_config(rng: &mut Xoshiro256, cores: usize) -> SystemConfig {
+    let model = if rng.gen_bool(0.5) {
+        CoreModel::OutOfOrder
+    } else {
+        CoreModel::InOrder
+    };
+    match rng.gen_usize(0, 4) {
+        0 => SystemConfig::host(cores, model),
+        1 => SystemConfig::host_prefetch(cores, model),
+        2 => SystemConfig::ndp(cores, model),
+        _ => SystemConfig::host_nuca(cores, model),
+    }
+}
+
+#[test]
+fn accounting_laws_hold_for_random_workloads() {
+    prop::check(40, |rng| {
+        let cores = [1, 2, 4, 8][rng.gen_usize(0, 4)];
+        let trace = random_trace(rng, cores);
+        let cfg = random_config(rng, cores);
+        let r = simulate(&cfg, &trace);
+
+        // Time and cycles strictly positive and consistent.
+        assert!(r.time_s > 0.0 && r.cycles > 0.0);
+        assert!((r.time_s - r.cycles / cfg.freq_hz).abs() / r.time_s < 1e-9);
+        // IPC bounded by issue width x cores.
+        assert!(r.ipc > 0.0 && r.ipc <= (cfg.issue_width as f64) * cores as f64 + 1e-9);
+        // Ratios in range.
+        assert!((0.0..=1.0).contains(&r.memory_bound));
+        assert!((0.0..=1.0 + 1e-9).contains(&r.lfmr), "lfmr={}", r.lfmr);
+        assert!((0.0..=1.0).contains(&r.row_hit_rate));
+        assert!(r.pf_accuracy >= 0.0 && r.pf_accuracy <= 1.0);
+        // Level fractions are a distribution over the loads.
+        let s: f64 = r.level_fracs.iter().sum();
+        let loads = trace
+            .iter()
+            .flatten()
+            .filter(|a| !a.write)
+            .count();
+        if loads > 0 {
+            assert!((s - 1.0).abs() < 1e-6, "level fracs sum {s}");
+        }
+        // Cache conservation: hits + misses == demand accesses at L1.
+        let accesses: u64 = trace.iter().map(|t| t.len() as u64).sum();
+        let ndp_stores = if cfg.kind == SystemKind::Ndp {
+            trace.iter().flatten().filter(|a| a.write).count() as u64
+        } else {
+            0
+        };
+        assert_eq!(r.l1_hits + r.l1_misses + ndp_stores, accesses);
+        // Energy components non-negative; NDP never pays L2/L3/link.
+        let e = r.energy;
+        for v in [e.l1, e.l2, e.l3, e.dram, e.link, e.noc] {
+            assert!(v >= 0.0);
+        }
+        if cfg.kind == SystemKind::Ndp {
+            assert_eq!(e.l2 + e.l3 + e.link, 0.0);
+        }
+        // Bandwidth never exceeds the configured peak.
+        assert!(
+            r.bw_bytes_s <= cfg.peak_bw() * 1.0001,
+            "bw {} > peak {}",
+            r.bw_bytes_s,
+            cfg.peak_bw()
+        );
+        // Basic-block miss attribution never exceeds total L3 misses+1
+        // slack for NDP DRAM accounting.
+        let bb_total: u64 = r.bb_llc_misses.iter().sum();
+        if cfg.l3.is_some() {
+            assert!(bb_total <= r.l3_misses + r.l1_misses);
+        }
+    });
+}
+
+#[test]
+fn determinism_across_repeated_runs() {
+    prop::check(10, |rng| {
+        let cores = [1, 4][rng.gen_usize(0, 2)];
+        let trace = random_trace(rng, cores);
+        let cfg = random_config(rng, cores);
+        let a = simulate(&cfg, &trace);
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.l3_misses, b.l3_misses);
+        assert_eq!(a.energy, b.energy);
+        assert_eq!(a.bb_llc_misses, b.bb_llc_misses);
+    });
+}
+
+#[test]
+fn more_cache_never_hurts_hit_count() {
+    // Host (3 levels) must never see *more* DRAM demand traffic than NDP
+    // (1 level) on the identical trace — the hierarchy can only filter.
+    prop::check(25, |rng| {
+        let cores = [1, 2, 4][rng.gen_usize(0, 3)];
+        let trace = random_trace(rng, cores);
+        let host = simulate(&SystemConfig::host(cores, CoreModel::OutOfOrder), &trace);
+        let ndp = simulate(&SystemConfig::ndp(cores, CoreModel::OutOfOrder), &trace);
+        let host_demand_reads = host.dram_reads;
+        let ndp_demand_reads = ndp.dram_reads;
+        assert!(
+            host_demand_reads <= ndp_demand_reads + ndp_demand_reads / 10 + 16,
+            "host dram reads {host_demand_reads} > ndp {ndp_demand_reads}"
+        );
+    });
+}
+
+#[test]
+fn memory_bound_increases_with_dependence() {
+    // Making every load dependent can only increase memory-boundedness.
+    prop::check(15, |rng| {
+        let cores = 2;
+        let indep = random_trace(rng, cores);
+        let dep: Vec<Vec<Access>> = indep
+            .iter()
+            .map(|t| {
+                t.iter()
+                    .map(|a| {
+                        let mut a = *a;
+                        if !a.write {
+                            a.dep = true;
+                        }
+                        a
+                    })
+                    .collect()
+            })
+            .collect();
+        let cfg = SystemConfig::host(cores, CoreModel::OutOfOrder);
+        let r_i = simulate(&cfg, &indep);
+        let r_d = simulate(&cfg, &dep);
+        assert!(
+            r_d.memory_bound >= r_i.memory_bound - 1e-9,
+            "dep {} < indep {}",
+            r_d.memory_bound,
+            r_i.memory_bound
+        );
+        assert!(r_d.time_s >= r_i.time_s * 0.999);
+    });
+}
+
+#[test]
+fn workload_traces_strong_scale_exactly() {
+    // Every registry function must emit the same total work for any
+    // thread count (the scalability sweep depends on it).
+    use damov::workloads::{registry, Scale};
+    prop::check(12, |rng| {
+        let fns = registry::representatives();
+        let spec = &fns[rng.gen_usize(0, fns.len())];
+        let t1: usize = spec.trace(1, Scale::tiny()).iter().map(Vec::len).sum();
+        let cores = [2, 3, 8, 64][rng.gen_usize(0, 4)];
+        let tn: usize = spec.trace(cores, Scale::tiny()).iter().map(Vec::len).sum();
+        let tol = t1 / 5 + 2048; // block-granular partitioning slack
+        assert!(
+            t1.abs_diff(tn) <= tol,
+            "{}: {} vs {} accesses at {} cores",
+            spec.id.code(),
+            t1,
+            tn,
+            cores
+        );
+    });
+}
