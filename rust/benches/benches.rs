@@ -102,16 +102,20 @@ fn main() {
     });
 
     if artifact::artifacts_available() {
-        let an = Analytics::load(&artifact::default_artifact_dir()).expect("artifacts");
-        let lw3 = lwords.clone();
-        benches.push(Bench {
-            name: "locality/pjrt_artifact",
-            run: Box::new(move || {
-                let m = an.locality_of_words(&lw3).expect("pjrt");
-                std::hint::black_box(m.spatial);
-                Some(ln)
-            }),
-        });
+        match Analytics::load(&artifact::default_artifact_dir()) {
+            Ok(an) => {
+                let lw3 = lwords.clone();
+                benches.push(Bench {
+                    name: "locality/pjrt_artifact",
+                    run: Box::new(move || {
+                        let m = an.locality_of_words(&lw3).expect("pjrt");
+                        std::hint::black_box(m.spatial);
+                        Some(ln)
+                    }),
+                });
+            }
+            Err(e) => damov::runtime::degraded("pjrt-load", "skip-bench", e),
+        }
     } else {
         eprintln!("[bench] artifacts not built; skipping locality/pjrt_artifact");
     }

@@ -1,19 +1,67 @@
 //! Experiment coordinator: schedules the full characterization sweep
 //! across worker threads, persists profiles to the results store, and
 //! regenerates every paper table/figure through the report harness.
+//!
+//! ## Fault tolerance
+//!
+//! The sweep is the hours-long part of the pipeline, so it gets the full
+//! crash-safety treatment:
+//! * every sweep is keyed by a [`sweep_fingerprint`] (spec codes + sweep
+//!   options + store schema), so a cached file is only ever served to
+//!   the run that produced it — never a stale or differently-configured
+//!   one that merely has the right length;
+//! * workers are panic-isolated with bounded retry
+//!   ([`crate::util::pool::par_map_catch`]): one bad function becomes a
+//!   recorded failure and a degraded (but usable) result set;
+//! * each completed profile is appended to a flushed, checksummed
+//!   checkpoint; after a crash or Ctrl-C, a `resume` run replays the
+//!   intact prefix and recomputes only unfinished functions.
 
 pub mod reports;
 pub mod store;
 
-use crate::methodology::step3::{profile_all, FunctionProfile, SweepOptions};
-use crate::sim::CoreModel;
+use crate::methodology::step3::{
+    profile_all_checkpointed, FunctionProfile, ProfileError, SweepOptions,
+};
+use crate::sim::{CoreModel, CORE_SWEEP};
 use crate::workloads::{registry, FunctionSpec, Scale};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// Fingerprint identifying a sweep: which functions, which options,
+/// which store schema. Caches and checkpoints are only trusted when
+/// their recorded fingerprint matches the sweep being requested.
+pub fn sweep_fingerprint(specs: &[FunctionSpec], opt: &SweepOptions) -> String {
+    let mut text = format!("schema={};scale={:x};nuca={};", store::SCHEMA_VERSION,
+        opt.scale.0.to_bits(), opt.nuca);
+    for m in opt.core_models {
+        text.push_str(match m {
+            CoreModel::OutOfOrder => "ooo,",
+            CoreModel::InOrder => "inorder,",
+        });
+    }
+    text.push(';');
+    for &c in CORE_SWEEP.iter() {
+        text.push_str(&format!("{c},"));
+    }
+    text.push(';');
+    for s in specs {
+        text.push_str(&s.id.code());
+        text.push(':');
+        text.push_str(&s.id.input);
+        text.push(',');
+    }
+    format!("{:016x}", crate::util::fault::key_of(&text))
+}
 
 /// Top-level driver owning the profile cache.
 pub struct Coordinator {
     pub results_dir: PathBuf,
     pub threads: usize,
+    /// Retries per panicking worker job before it is recorded as failed.
+    pub max_retries: u32,
+    /// Resume from an existing checkpoint instead of starting over.
+    pub resume: bool,
 }
 
 impl Coordinator {
@@ -23,15 +71,33 @@ impl Coordinator {
         Coordinator {
             results_dir,
             threads,
+            max_retries: 2,
+            resume: false,
         }
+    }
+
+    /// Configure recovery behavior (`--max-retries`, `--resume`).
+    pub fn with_recovery(mut self, max_retries: u32, resume: bool) -> Coordinator {
+        self.max_retries = max_retries;
+        self.resume = resume;
+        self
     }
 
     fn cache_path(&self, tag: &str) -> PathBuf {
         self.results_dir.join(format!("profiles-{tag}.json"))
     }
 
-    /// Profile the given functions, using the on-disk cache when the tag
-    /// matches a previous run (pass `refresh=true` to force recompute).
+    fn checkpoint_path(&self, tag: &str) -> PathBuf {
+        self.results_dir.join(format!("checkpoint-{tag}.jsonl"))
+    }
+
+    /// Profile the given functions, using the on-disk cache when its
+    /// fingerprint matches this exact sweep (pass `refresh=true` to
+    /// force recompute). Survives worker panics (bounded retry, then a
+    /// recorded failure) and interruption (incremental checkpoint;
+    /// `resume` restarts from the last completed function). On partial
+    /// failure the completed profiles are returned and the checkpoint is
+    /// kept so a follow-up `--resume` run can finish the rest.
     pub fn profiles(
         &self,
         tag: &str,
@@ -39,17 +105,93 @@ impl Coordinator {
         opt: SweepOptions,
         refresh: bool,
     ) -> Vec<FunctionProfile> {
+        let fingerprint = sweep_fingerprint(specs, &opt);
         let path = self.cache_path(tag);
         if !refresh {
-            if let Some(cached) = store::load_profiles(&path) {
+            if let Some(cached) = store::load_profiles_keyed(&path, &fingerprint) {
                 if cached.len() == specs.len() {
                     return cached;
                 }
             }
         }
-        let profiles = profile_all(specs, opt, self.threads);
-        if let Err(e) = store::save_profiles(&path, &profiles) {
-            eprintln!("warning: could not persist profiles to {path:?}: {e}");
+
+        // Recover completed functions from a previous interrupted run.
+        let ckpt_path = self.checkpoint_path(tag);
+        let mut done: BTreeMap<String, FunctionProfile> = BTreeMap::new();
+        if self.resume && !refresh {
+            for p in store::load_checkpoint(&ckpt_path, &fingerprint) {
+                done.insert(p.code.clone(), p);
+            }
+            if !done.is_empty() {
+                eprintln!(
+                    "[damov] resume: {}/{} functions recovered from {}",
+                    done.len(),
+                    specs.len(),
+                    ckpt_path.display()
+                );
+            }
+        }
+        let todo: Vec<FunctionSpec> = specs
+            .iter()
+            .filter(|s| !done.contains_key(&s.id.code()))
+            .cloned()
+            .collect();
+
+        let mut failures: Vec<ProfileError> = Vec::new();
+        if !todo.is_empty() {
+            // Checkpoint as we go; losing the checkpoint is a warning,
+            // not a failure — the sweep itself continues.
+            let writer = match store::CheckpointWriter::create(&ckpt_path, &fingerprint, !done.is_empty())
+            {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!(
+                        "warning: [degraded] component=checkpoint detail=\"{e}\" \
+                         (sweep continues without crash recovery)"
+                    );
+                    None
+                }
+            };
+            let results = profile_all_checkpointed(&todo, opt, self.threads, self.max_retries, |p| {
+                if let Some(w) = &writer {
+                    if let Err(e) = w.append(p) {
+                        eprintln!("warning: [degraded] component=checkpoint detail=\"{e}\"");
+                    }
+                }
+            });
+            for r in results {
+                match r {
+                    Ok(p) => {
+                        done.insert(p.code.clone(), p);
+                    }
+                    Err(e) => failures.push(e),
+                }
+            }
+        }
+
+        // Assemble in spec order from recovered + freshly computed.
+        let profiles: Vec<FunctionProfile> = specs
+            .iter()
+            .filter_map(|s| done.remove(&s.id.code()))
+            .collect();
+
+        if failures.is_empty() && profiles.len() == specs.len() {
+            if let Err(e) = store::save_profiles_keyed(&path, &profiles, &fingerprint) {
+                eprintln!("warning: could not persist profiles to {path:?}: {e}");
+            } else {
+                // The cache now holds everything; the checkpoint is spent.
+                std::fs::remove_file(&ckpt_path).ok();
+            }
+        } else {
+            eprintln!(
+                "warning: [degraded] component=sweep tag={tag} detail=\"{} of {} functions \
+                 failed; checkpoint kept for --resume\"",
+                specs.len() - profiles.len(),
+                specs.len()
+            );
+            for e in &failures {
+                eprintln!("warning:   {e}");
+            }
         }
         profiles
     }
@@ -110,6 +252,77 @@ mod tests {
         assert_eq!(a[0].code, b[0].code);
         assert!((a[0].mpki - b[0].mpki).abs() < 1e-9);
         assert_eq!(a[0].runs.len(), b[0].runs.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_cache_with_matching_length_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("damov-stale-{}", std::process::id()));
+        let coord = Coordinator::new(&dir, 4);
+        let opt = SweepOptions {
+            scale: Scale(0.05),
+            ..Default::default()
+        };
+        let reps = registry::representatives();
+        let first: Vec<_> = reps.iter().take(2).cloned().collect();
+        let second: Vec<_> = reps.iter().skip(2).take(2).cloned().collect();
+        let a = coord.profiles("s", &first, opt, true);
+        // Same tag, same *length*, different specs: the pre-fingerprint
+        // cache served `a` here. Now the fingerprint mismatch forces a
+        // recompute of the right functions.
+        let b = coord.profiles("s", &second, opt, false);
+        assert_eq!(b.len(), 2);
+        assert_ne!(a[0].code, b[0].code);
+        assert_eq!(b[0].code, second[0].id.code());
+        // Different options (scale) must also miss the cache.
+        let opt2 = SweepOptions {
+            scale: Scale(0.06),
+            ..Default::default()
+        };
+        assert_ne!(
+            sweep_fingerprint(&second, &opt),
+            sweep_fingerprint(&second, &opt2)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_recovers_checkpointed_functions() {
+        let dir = std::env::temp_dir().join(format!("damov-resume-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let specs: Vec<_> = registry::representatives().into_iter().take(3).collect();
+        let opt = SweepOptions {
+            scale: Scale(0.05),
+            ..Default::default()
+        };
+        let fp = sweep_fingerprint(&specs, &opt);
+
+        // Baseline, computed without any persistence in the way.
+        let clean = Coordinator::new(&dir, 2).profiles("base", &specs, opt, true);
+        assert_eq!(clean.len(), 3);
+
+        // Emulate a sweep killed after two functions: a checkpoint with
+        // records 0 and 1 (and no cache file for this tag).
+        let ckpt = dir.join("checkpoint-r.jsonl");
+        let w = store::CheckpointWriter::create(&ckpt, &fp, false).unwrap();
+        w.append(&clean[0]).unwrap();
+        w.append(&clean[1]).unwrap();
+        drop(w);
+
+        let resumed = Coordinator::new(&dir, 2)
+            .with_recovery(0, true)
+            .profiles("r", &specs, opt, false);
+        assert_eq!(resumed.len(), 3);
+        // (The "only unfinished functions are recomputed" property is
+        // asserted via profile_call_count in tests/fault_injection.rs,
+        // where no other test runs in the same process.)
+        for (r, c) in resumed.iter().zip(clean.iter()) {
+            assert_eq!(r.code, c.code);
+            assert!((r.mpki - c.mpki).abs() < 1e-12);
+        }
+        // Completed sweep: cache written, checkpoint retired.
+        assert!(!ckpt.exists());
+        assert!(store::load_profiles_keyed(&dir.join("profiles-r.json"), &fp).is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -698,6 +698,61 @@ pub fn fig24_25(reps: &[FunctionProfile]) -> String {
 
 // ----------------------------------------------------------- tab8 / val
 
+// ---------------------------------------------------------------- health
+
+/// Sweep health: coverage of a profile set against the spec list it was
+/// meant to cover. A fault-free complete sweep reports 100%; after a
+/// degraded run (worker failures, interrupted sweep) this names exactly
+/// which functions are missing so a `--resume` run can finish the job.
+pub fn sweep_health(
+    expected: &[crate::workloads::FunctionSpec],
+    profiles: &[FunctionProfile],
+) -> String {
+    use std::collections::{BTreeMap, BTreeSet};
+    let have: BTreeSet<String> = profiles.iter().map(|p| p.code.clone()).collect();
+    let mut by_class: BTreeMap<&str, (usize, usize, Vec<String>)> = BTreeMap::new();
+    for s in expected {
+        let class = s.paper_class.unwrap_or(s.family_class);
+        let entry = by_class.entry(class).or_default();
+        entry.0 += 1;
+        let code = s.id.code();
+        if have.contains(&code) {
+            entry.1 += 1;
+        } else {
+            entry.2.push(code);
+        }
+    }
+    let mut t = Table::new(
+        "Sweep health: profile coverage per class",
+        &["class", "expected", "present", "missing"],
+    );
+    for (class, (exp, present, missing)) in &by_class {
+        t.row(vec![
+            class.to_string(),
+            exp.to_string(),
+            present.to_string(),
+            if missing.is_empty() {
+                "-".to_string()
+            } else {
+                missing.join(" ")
+            },
+        ]);
+    }
+    let total_missing: usize = by_class.values().map(|v| v.2.len()).sum();
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\n{}/{} functions profiled{}\n",
+        expected.len() - total_missing,
+        expected.len(),
+        if total_missing == 0 {
+            "; sweep complete".to_string()
+        } else {
+            format!("; rerun with --resume to finish the remaining {total_missing}")
+        }
+    ));
+    out
+}
+
 /// Table 8 / Appendix A: the full function list with classes.
 pub fn tab8(reps: &[FunctionProfile], holdout: &[FunctionProfile]) -> String {
     let mut t = Table::new(
@@ -834,6 +889,21 @@ mod tests {
         let s = fig18(&profiles);
         assert!(s.contains("1a"));
         assert!(s.contains("1b"));
+    }
+
+    #[test]
+    fn sweep_health_reports_missing_functions() {
+        let profiles = mini_profiles(); // STRCpy + CHAHsti
+        let specs: Vec<_> = ["STRCpy", "CHAHsti", "STRTriad"]
+            .iter()
+            .map(|c| registry::by_code(c).unwrap())
+            .collect();
+        let s = sweep_health(&specs, &profiles);
+        assert!(s.contains("STRTriad"), "missing function must be named:\n{s}");
+        assert!(s.contains("2/3 functions profiled"));
+        assert!(s.contains("--resume"));
+        let complete = sweep_health(&specs[..2], &profiles);
+        assert!(complete.contains("sweep complete"));
     }
 
     #[test]

@@ -3,13 +3,42 @@
 //! The full characterization sweep takes minutes; persisting profiles
 //! lets `damov report <fig>` regenerate any figure instantly and gives
 //! downstream users a machine-readable results database.
+//!
+//! ## Durability model
+//!
+//! Two on-disk artifacts, both versioned ([`SCHEMA_VERSION`]) and keyed
+//! by a sweep *fingerprint* (hash of spec codes + sweep options, see
+//! `coordinator::sweep_fingerprint`) with a per-record FNV-64 checksum
+//! over the canonical serialization:
+//!
+//! * **Cache** (`profiles-<tag>.json`): the complete result set, written
+//!   via temp-file + atomic rename — an interrupted save can never leave
+//!   a torn file that poisons the next run.
+//! * **Checkpoint** (`checkpoint-<tag>.jsonl`): append-only JSON-lines
+//!   (header line + one record per completed function, flushed per
+//!   record). A crash or Ctrl-C mid-sweep loses at most the record being
+//!   written; `--resume` replays the intact prefix and recomputes only
+//!   the rest. A torn tail is detected (parse/checksum failure) and
+//!   dropped.
+//!
+//! Legacy bare-array files (schema v1) are still readable through
+//! [`load_profiles`]; the fingerprint-checked [`load_profiles_keyed`]
+//! rejects them, forcing one clean recompute.
 
 use crate::methodology::locality::LocalityMetrics;
 use crate::methodology::step3::{FunctionProfile, Run};
 use crate::sim::engine::SimResult;
 use crate::sim::{CoreModel, SystemKind};
+use crate::util::fault;
 use crate::util::json::Json;
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Version of the persisted profile schema. Bump on any change to the
+/// record layout; loaders reject other versions so a sweep never trusts
+/// stale-format data.
+pub const SCHEMA_VERSION: u64 = 2;
 
 fn kind_label(k: SystemKind) -> &'static str {
     k.label()
@@ -258,21 +287,198 @@ pub fn profile_from_json(j: &Json) -> Option<FunctionProfile> {
     })
 }
 
-pub fn save_profiles(path: &Path, profiles: &[FunctionProfile]) -> std::io::Result<()> {
-    let j = Json::Arr(profiles.iter().map(profile_to_json).collect());
-    std::fs::write(path, j.to_string_pretty())
+/// FNV-1a 64 over a canonical serialization, hex-encoded. Stored as a
+/// string because this JSON model keeps numbers as f64 (u64 checksums
+/// would lose bits above 2^53).
+fn checksum_hex(s: &str) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
 }
 
+/// One checksummed profile record.
+fn record_to_json(p: &FunctionProfile) -> Json {
+    let pj = profile_to_json(p);
+    let sum = checksum_hex(&pj.to_string_compact());
+    let mut j = Json::obj();
+    j.set("checksum", sum).set("profile", pj);
+    j
+}
+
+/// Decode + verify one record. The checksum is recomputed over the
+/// re-serialized parsed value; serialization is canonical (ordered keys,
+/// deterministic float formatting), so any corruption of the stored
+/// profile — even one that still parses — is caught.
+fn record_from_json(j: &Json) -> Option<FunctionProfile> {
+    let sum = j.get("checksum")?.as_str()?;
+    let pj = j.get("profile")?;
+    if checksum_hex(&pj.to_string_compact()) != sum {
+        return None;
+    }
+    profile_from_json(pj)
+}
+
+/// Write `text` to `path` via a temp file + atomic rename, so readers
+/// never observe a partially written file.
+fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, text)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// Persist the complete result set of a sweep, keyed by its fingerprint.
+pub fn save_profiles_keyed(
+    path: &Path,
+    profiles: &[FunctionProfile],
+    fingerprint: &str,
+) -> std::io::Result<()> {
+    fault::maybe_io("store", fault::key_of(&path.to_string_lossy()))?;
+    let mut root = Json::obj();
+    root.set("schema", SCHEMA_VERSION)
+        .set("fingerprint", fingerprint)
+        .set(
+            "records",
+            Json::Arr(profiles.iter().map(record_to_json).collect()),
+        );
+    write_atomic(path, &root.to_string_pretty())
+}
+
+/// [`save_profiles_keyed`] with an empty fingerprint (ad-hoc dumps).
+pub fn save_profiles(path: &Path, profiles: &[FunctionProfile]) -> std::io::Result<()> {
+    save_profiles_keyed(path, profiles, "")
+}
+
+/// Decode a schema-v2 document; `None` on any version/record mismatch.
+fn parse_v2(j: &Json) -> Option<(String, Vec<FunctionProfile>)> {
+    let schema = j.get("schema")?.as_f64()? as u64;
+    if schema != SCHEMA_VERSION {
+        return None;
+    }
+    let fp = j.get("fingerprint")?.as_str()?.to_string();
+    let records = j.get("records")?.as_arr()?;
+    let profiles: Vec<FunctionProfile> = records.iter().filter_map(record_from_json).collect();
+    if profiles.len() == records.len() {
+        Some((fp, profiles))
+    } else {
+        None // corrupt record: distrust the whole file, recompute
+    }
+}
+
+/// Load a profile store regardless of its fingerprint: schema-v2
+/// documents (checksum-verified) and legacy bare arrays both work.
+/// `None` on any corruption — the caller recomputes.
 pub fn load_profiles(path: &Path) -> Option<Vec<FunctionProfile>> {
     let text = std::fs::read_to_string(path).ok()?;
     let j = Json::parse(&text).ok()?;
-    let arr = j.as_arr()?;
-    let profiles: Vec<FunctionProfile> = arr.iter().filter_map(profile_from_json).collect();
-    if profiles.len() == arr.len() {
-        Some(profiles)
-    } else {
-        None // corrupt/partial cache: recompute
+    match &j {
+        Json::Obj(_) => parse_v2(&j).map(|(_, profiles)| profiles),
+        Json::Arr(arr) => {
+            // Legacy (schema v1): bare array of profiles, no checksums.
+            let profiles: Vec<FunctionProfile> =
+                arr.iter().filter_map(profile_from_json).collect();
+            (profiles.len() == arr.len()).then_some(profiles)
+        }
+        _ => None,
     }
+}
+
+/// Load a cache only if it is schema-v2, intact, and was produced by a
+/// sweep with exactly this fingerprint. This is what fixes the stale
+/// cache bug: a file whose *length* happens to match but whose specs or
+/// options differ is rejected instead of silently served.
+pub fn load_profiles_keyed(path: &Path, fingerprint: &str) -> Option<Vec<FunctionProfile>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let (fp, profiles) = parse_v2(&j)?;
+    (fp == fingerprint).then_some(profiles)
+}
+
+/// Append-only crash-safe sweep checkpoint (JSON-lines; see module docs).
+/// Shared across worker threads; each append holds the file lock just
+/// long enough to write + flush one record.
+pub struct CheckpointWriter {
+    file: Mutex<std::fs::File>,
+    path: PathBuf,
+}
+
+impl CheckpointWriter {
+    /// Start a checkpoint at `path`. With `append` (resume), new records
+    /// are added after the existing intact prefix; otherwise the file is
+    /// recreated with a fresh header line.
+    pub fn create(path: &Path, fingerprint: &str, append: bool) -> std::io::Result<CheckpointWriter> {
+        fault::maybe_io("store", fault::key_of(&path.to_string_lossy()))?;
+        let file = if append && path.exists() {
+            std::fs::OpenOptions::new().append(true).open(path)?
+        } else {
+            let mut f = std::fs::File::create(path)?;
+            let mut hdr = Json::obj();
+            hdr.set("schema", SCHEMA_VERSION).set("fingerprint", fingerprint);
+            f.write_all(hdr.to_string_compact().as_bytes())?;
+            f.write_all(b"\n")?;
+            f
+        };
+        Ok(CheckpointWriter {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one completed profile, flushed immediately: a crash loses
+    /// at most the record being written, never an earlier one.
+    pub fn append(&self, p: &FunctionProfile) -> std::io::Result<()> {
+        fault::maybe_io("store", fault::key_of(&p.code))?;
+        let line = record_to_json(p).to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()
+    }
+}
+
+/// Load every intact record of a checkpoint with a matching header
+/// (schema + fingerprint). Missing file or foreign header → empty.
+/// Decoding stops at the first torn or corrupt line: everything before
+/// it is checksum-verified and trusted, everything after is dropped and
+/// will be recomputed.
+pub fn load_checkpoint(path: &Path, fingerprint: &str) -> Vec<FunctionProfile> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let mut lines = text.lines();
+    let Some(first) = lines.next() else {
+        return Vec::new();
+    };
+    let Ok(hdr) = Json::parse(first) else {
+        return Vec::new();
+    };
+    let schema_ok =
+        hdr.get("schema").and_then(Json::as_f64).map(|s| s as u64) == Some(SCHEMA_VERSION);
+    let fp_ok = hdr.get("fingerprint").and_then(Json::as_str) == Some(fingerprint);
+    if !schema_ok || !fp_ok {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { break };
+        let Some(p) = record_from_json(&j) else { break };
+        out.push(p);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -329,6 +535,61 @@ mod tests {
         let path = std::env::temp_dir().join(format!("damov-bad-{}.json", std::process::id()));
         std::fs::write(&path, "[{\"code\": 42}]").unwrap();
         assert!(load_profiles(&path).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn keyed_load_requires_matching_fingerprint() {
+        let spec = registry::by_code("STRCpy").unwrap();
+        let p = profile_function(
+            &spec,
+            SweepOptions {
+                scale: Scale(0.05),
+                ..Default::default()
+            },
+        );
+        let path = std::env::temp_dir().join(format!("damov-keyed-{}.json", std::process::id()));
+        save_profiles_keyed(&path, std::slice::from_ref(&p), "fp-aaaa").unwrap();
+        assert!(load_profiles_keyed(&path, "fp-aaaa").is_some());
+        assert!(load_profiles_keyed(&path, "fp-bbbb").is_none());
+        // The unkeyed loader still accepts it (checksums verified).
+        assert_eq!(load_profiles(&path).unwrap().len(), 1);
+        // No temp file left behind by the atomic write.
+        assert!(!path.with_extension(format!("tmp.{}", std::process::id())).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_torn_tail() {
+        let mk = |code: &str| {
+            profile_function(
+                &registry::by_code(code).unwrap(),
+                SweepOptions {
+                    scale: Scale(0.05),
+                    ..Default::default()
+                },
+            )
+        };
+        let a = mk("STRCpy");
+        let b = mk("STRSca");
+        let path = std::env::temp_dir().join(format!("damov-ckpt-{}.jsonl", std::process::id()));
+        let w = CheckpointWriter::create(&path, "fp-1", false).unwrap();
+        w.append(&a).unwrap();
+        w.append(&b).unwrap();
+        drop(w);
+        // Simulate a crash mid-append: torn trailing line.
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"checksum\":\"00\",\"profile\":{\"co").unwrap();
+        }
+        let got = load_checkpoint(&path, "fp-1");
+        assert_eq!(got.len(), 2, "intact prefix survives a torn tail");
+        assert_eq!(got[0].code, a.code);
+        assert_eq!(got[1].code, b.code);
+        // Foreign fingerprint or missing file → empty.
+        assert!(load_checkpoint(&path, "fp-2").is_empty());
+        assert!(load_checkpoint(Path::new("/nonexistent/ckpt.jsonl"), "fp-1").is_empty());
         std::fs::remove_file(&path).ok();
     }
 }

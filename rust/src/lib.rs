@@ -16,11 +16,25 @@
 //!   six-class model.
 //! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
 //!   analytics artifacts (locality metrics, k-means) produced by
-//!   `python/compile/aot.py`.
+//!   `python/compile/aot.py`. Compiled only with `--features pjrt`; the
+//!   default build degrades gracefully to the bit-compatible native Rust
+//!   analytics.
 //! * [`coordinator`] — parallel experiment scheduler, results store, and
 //!   the report harness that regenerates every paper table and figure.
 //! * [`util`] — in-repo infrastructure substrates (PRNG, JSON, CLI,
-//!   thread pool, stats, property-testing harness).
+//!   thread pool, stats, property-testing harness, fault injection).
+//!
+//! ## Fault tolerance
+//!
+//! The hours-long characterization sweep is engineered to survive
+//! failure: workers are panic-isolated with bounded retry
+//! ([`util::pool::par_map_catch`]), every completed profile is appended
+//! to a checksummed crash-safe checkpoint that `--resume` replays
+//! ([`coordinator::store`]), caches are fingerprint-keyed so stale data
+//! is never served ([`coordinator::sweep_fingerprint`]), and a
+//! deterministic fault-injection harness ([`util::fault`], activated by
+//! `DAMOV_FAULT_SPEC`) proves in CI that a sweep under injected panics
+//! and I/O errors converges to byte-identical results.
 
 pub mod coordinator;
 pub mod methodology;

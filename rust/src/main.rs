@@ -10,6 +10,25 @@
 //!
 //! Common options: --threads N, --scale X, --refresh, --results DIR,
 //! --cores N, --system host|host+pf|ndp|host-nuca, --inorder.
+//!
+//! Robustness options (sweep commands):
+//!   --resume          resume an interrupted sweep from its checkpoint
+//!                     (`checkpoint-<tag>.jsonl` in the results dir):
+//!                     only functions without an intact checkpoint
+//!                     record are recomputed
+//!   --max-retries N   retries per panicking worker job before it is
+//!                     recorded as failed (default 2)
+//!
+//! Sweeps persist incrementally: each completed function is appended to
+//! a checksummed, crash-safe checkpoint, and the final cache
+//! (`profiles-<tag>.json`) is written atomically and keyed by a
+//! fingerprint of the specs + sweep options, so stale or torn files are
+//! rejected and recomputed, never silently served.
+//!
+//! Fault injection (testing the above): set `DAMOV_FAULT_SPEC`, e.g.
+//! `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,seed:42`, to inject
+//! deterministic panics / I/O errors / latency at the sim, store, and
+//! PJRT-load boundaries. See `util::fault`.
 
 use damov::coordinator::{default_results_dir, reports, Coordinator};
 use damov::methodology::classify::{self, Features};
@@ -22,7 +41,10 @@ use damov::util::pool::default_threads;
 use damov::workloads::{registry, Scale};
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["refresh", "inorder", "no-artifacts"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["refresh", "inorder", "no-artifacts", "resume"],
+    );
     match args.command.as_deref() {
         Some("list") => cmd_list(),
         Some("config") => print!("{}", reports::tab1()),
@@ -45,7 +67,12 @@ fn main() {
 fn usage() {
     eprintln!(
         "usage: damov <list|config|sim|step1|characterize|report|validate> [options]\n\
-         see `damov report all --threads 16` to regenerate every figure"
+         common: --threads N --scale X --refresh --results DIR\n\
+         robustness: --resume (continue an interrupted sweep from its checkpoint)\n\
+         \x20           --max-retries N (retries per panicking worker job, default 2)\n\
+         \x20           DAMOV_FAULT_SPEC=panic:P,io:P,delay:P,seed:S (deterministic fault injection)\n\
+         see `damov report all --threads 16` to regenerate every figure,\n\
+         `damov report health` for sweep coverage after a degraded run"
     );
 }
 
@@ -167,14 +194,21 @@ fn cmd_characterize(args: &Args) {
     println!("Step 2: architecture-independent locality");
     let trace = spec.locality_trace(scale);
     let loc = if !args.flag("no-artifacts") && artifact::artifacts_available() {
+        // PJRT is an accelerator, not a dependency: any failure — load,
+        // compile, or execute — degrades to the native Rust oracle.
         match Analytics::load(&artifact::default_artifact_dir()) {
-            Ok(an) => {
-                let m = an.locality(&trace).expect("artifact locality");
-                println!("  (computed via AOT Pallas artifact on PJRT)");
-                m
-            }
+            Ok(an) => match an.locality(&trace) {
+                Ok(m) => {
+                    println!("  (computed via AOT Pallas artifact on PJRT)");
+                    m
+                }
+                Err(e) => {
+                    damov::runtime::degraded("pjrt-locality", "native-rust", e);
+                    locality::locality(&trace)
+                }
+            },
             Err(e) => {
-                eprintln!("  (artifact load failed: {e}; using Rust fallback)");
+                damov::runtime::degraded("pjrt-load", "native-rust", e);
                 locality::locality(&trace)
             }
         }
@@ -234,10 +268,10 @@ fn cmd_characterize(args: &Args) {
     );
 }
 
-const ALL_REPORTS: [&str; 25] = [
+const ALL_REPORTS: [&str; 26] = [
     "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig22",
-    "fig23", "fig24", "tab8", "validation",
+    "fig23", "fig24", "tab8", "validation", "health",
 ];
 
 fn cmd_report(args: &Args) {
@@ -256,7 +290,8 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         .opt("results")
         .map(Into::into)
         .unwrap_or_else(default_results_dir);
-    let coord = Coordinator::new(&results_dir, threads);
+    let coord = Coordinator::new(&results_dir, threads)
+        .with_recovery(args.opt_u64("max-retries", 2) as u32, args.flag("resume"));
     let scale = Scale(args.opt_f64("scale", 1.0));
 
     let needs_reps = wanted.iter().any(|w| !matches!(*w, "tab1" | "fig22"));
@@ -318,6 +353,7 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
             "fig24" | "fig25" => reports::fig24_25(&reps),
             "tab8" => reports::tab8(&reps, &holdout),
             "validation" | "val" => reports::validation(&reps, &holdout),
+            "health" => reports::sweep_health(&registry::representatives(), &reps),
             other => {
                 eprintln!("unknown report {other:?}");
                 continue;

@@ -9,8 +9,20 @@
 
 use super::locality::{locality, LocalityMetrics};
 use crate::sim::{simulate, CoreModel, SimResult, SystemConfig, SystemKind, CORE_SWEEP};
-use crate::util::pool::par_map;
+use crate::util::fault;
+use crate::util::pool::par_map_catch;
 use crate::workloads::{FunctionSpec, Scale};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of `profile_function` invocations. Observability
+/// hook for the resume machinery: lets tests (and `--resume` users)
+/// verify that a resumed sweep recomputes only unfinished functions.
+static PROFILE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// How many function profiles this process has computed (not cached).
+pub fn profile_call_count() -> u64 {
+    PROFILE_CALLS.load(Ordering::Relaxed)
+}
 
 /// One simulated (system, core-model, cores) point.
 #[derive(Debug, Clone)]
@@ -111,6 +123,12 @@ impl Default for SweepOptions {
 
 /// Simulate every (system, model, cores) point for one function.
 pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfile {
+    PROFILE_CALLS.fetch_add(1, Ordering::Relaxed);
+    // Deterministic fault-injection boundary for the whole simulation of
+    // one function (active only under DAMOV_FAULT_SPEC / test override).
+    let fault_key = fault::key_of(&spec.id.code());
+    fault::maybe_delay("sim", fault_key);
+    fault::maybe_panic("sim", fault_key);
     let loc = locality(&spec.locality_trace(opt.scale));
     let mut kinds = vec![SystemKind::Host, SystemKind::HostPrefetch, SystemKind::Ndp];
     if opt.nuca {
@@ -170,13 +188,84 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
     }
 }
 
-/// Profile many functions in parallel.
+/// A function whose profiling panicked on every attempt.
+#[derive(Debug, Clone)]
+pub struct ProfileError {
+    /// Function code (e.g. `STRTriad`) of the failed job.
+    pub code: String,
+    /// Index of the function in the input spec slice.
+    pub index: usize,
+    /// Attempts made (1 + retries).
+    pub attempts: u32,
+    /// Stringified panic payload of the last attempt.
+    pub message: String,
+}
+
+impl std::fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (function #{}) failed after {} attempt(s): {}",
+            self.code, self.index, self.attempts, self.message
+        )
+    }
+}
+
+/// Profile many functions in parallel with panic isolation: one
+/// panicking simulation yields one recorded [`ProfileError`] (after
+/// `max_retries` bounded retries with backoff), not a lost sweep.
+/// `on_complete` runs on the worker thread as soon as each profile
+/// finishes — the coordinator uses it to append to the crash-safe
+/// checkpoint so an interrupted sweep can resume.
+pub fn profile_all_checkpointed<C>(
+    specs: &[FunctionSpec],
+    opt: SweepOptions,
+    threads: usize,
+    max_retries: u32,
+    on_complete: C,
+) -> Vec<Result<FunctionProfile, ProfileError>>
+where
+    C: Fn(&FunctionProfile) + Sync,
+{
+    par_map_catch(specs, threads, max_retries, |s| {
+        let p = profile_function(s, opt);
+        on_complete(&p);
+        p
+    })
+    .into_iter()
+    .zip(specs)
+    .map(|(res, spec)| {
+        res.map_err(|e| ProfileError {
+            code: spec.id.code(),
+            index: e.index,
+            attempts: e.attempts,
+            message: e.message,
+        })
+    })
+    .collect()
+}
+
+/// [`profile_all_checkpointed`] without a completion hook.
+pub fn profile_all_fallible(
+    specs: &[FunctionSpec],
+    opt: SweepOptions,
+    threads: usize,
+    max_retries: u32,
+) -> Vec<Result<FunctionProfile, ProfileError>> {
+    profile_all_checkpointed(specs, opt, threads, max_retries, |_| {})
+}
+
+/// Profile many functions in parallel. Panics (naming the function) if
+/// any job fails — use [`profile_all_fallible`] to keep partial results.
 pub fn profile_all(
     specs: &[FunctionSpec],
     opt: SweepOptions,
     threads: usize,
 ) -> Vec<FunctionProfile> {
-    par_map(specs, threads, |s| profile_function(s, opt))
+    profile_all_fallible(specs, opt, threads, 0)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("sweep failed: {e}")))
+        .collect()
 }
 
 #[cfg(test)]

@@ -3,65 +3,13 @@
 //! Interchange format is HLO **text**: jax ≥ 0.5 serializes protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see DESIGN.md and the xla-example README).
+//!
+//! The PJRT client itself (and its `xla`/`anyhow` dependencies) is only
+//! compiled with `--features pjrt`; the artifact *discovery* helpers
+//! below are dependency-free so every build can decide whether a
+//! fallback to the native Rust analytics is needed.
 
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
-
-/// Shared PJRT CPU client. Creating a client is expensive; one per
-/// process is plenty.
-pub struct PjrtContext {
-    pub client: xla::PjRtClient,
-}
-
-impl PjrtContext {
-    pub fn cpu() -> Result<PjrtContext> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtContext { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-/// One compiled executable loaded from an HLO-text artifact.
-pub struct Artifact {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Artifact {
-    /// Load and compile `<name>.hlo.txt` from `dir`.
-    pub fn load(ctx: &PjrtContext, dir: &Path, name: &str) -> Result<Artifact> {
-        let path = dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = ctx
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        Ok(Artifact {
-            name: name.to_string(),
-            exe,
-        })
-    }
-
-    /// Execute with literal inputs; returns the flattened output tuple
-    /// (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        Ok(lit.to_tuple()?)
-    }
-}
+use std::path::PathBuf;
 
 /// Default artifact directory: `$DAMOV_ARTIFACTS` or `artifacts/` under
 /// the workspace root (next to Cargo.toml), falling back to ./artifacts.
@@ -80,3 +28,73 @@ pub fn default_artifact_dir() -> PathBuf {
 pub fn artifacts_available() -> bool {
     default_artifact_dir().join("locality.hlo.txt").exists()
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use crate::util::fault;
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// Shared PJRT CPU client. Creating a client is expensive; one per
+    /// process is plenty.
+    pub struct PjrtContext {
+        pub client: xla::PjRtClient,
+    }
+
+    impl PjrtContext {
+        pub fn cpu() -> Result<PjrtContext> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtContext { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+    }
+
+    /// One compiled executable loaded from an HLO-text artifact.
+    pub struct Artifact {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Artifact {
+        /// Load and compile `<name>.hlo.txt` from `dir`.
+        pub fn load(ctx: &PjrtContext, dir: &Path, name: &str) -> Result<Artifact> {
+            // Deterministic fault-injection boundary: a failed artifact
+            // load must degrade to the native Rust path, never abort.
+            fault::maybe_io("pjrt-load", fault::key_of(name))
+                .with_context(|| format!("loading artifact {name}"))?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = ctx
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            Ok(Artifact {
+                name: name.to_string(),
+                exe,
+            })
+        }
+
+        /// Execute with literal inputs; returns the flattened output tuple
+        /// (aot.py lowers with `return_tuple=True`).
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing artifact {}", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            Ok(lit.to_tuple()?)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Artifact, PjrtContext};

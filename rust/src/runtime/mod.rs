@@ -2,9 +2,103 @@
 //! artifacts (HLO text, produced by `python/compile/aot.py`) onto the
 //! PJRT CPU client and execute them from Rust. Python never runs at
 //! analysis time — the artifacts are self-contained.
+//!
+//! ## Graceful degradation
+//!
+//! The PJRT path is an acceleration, not a dependency: every analytics
+//! entry point has a bit-compatible native Rust oracle
+//! (`methodology::locality`, `methodology::cluster`). When the bridge is
+//! unavailable — crate built without `--features pjrt`, artifacts not
+//! compiled, or a load/execute failure (including injected `pjrt-load`
+//! faults) — callers emit a structured [`degraded`] warning and fall
+//! back to the native path instead of aborting.
 
+#[cfg(feature = "pjrt")]
 pub mod analytics;
 pub mod artifact;
 
+#[cfg(feature = "pjrt")]
 pub use analytics::Analytics;
-pub use artifact::{default_artifact_dir, Artifact, PjrtContext};
+pub use artifact::{artifacts_available, default_artifact_dir};
+#[cfg(feature = "pjrt")]
+pub use artifact::{Artifact, PjrtContext};
+
+/// Emit a structured degradation warning: machine-grepable `key=value`
+/// fields naming the failed component, the fallback taken, and why.
+pub fn degraded(component: &str, fallback: &str, detail: impl std::fmt::Display) {
+    eprintln!("warning: [degraded] component={component} fallback={fallback} detail=\"{detail}\"");
+}
+
+/// Error produced by the stub runtime when the crate is built without
+/// the `pjrt` feature (the offline environment has no `xla` crate).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug, Clone)]
+pub struct RuntimeUnavailable(pub String);
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PJRT runtime unavailable: {}", self.0)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Stub analytics bridge compiled when the `pjrt` feature is off. Its
+/// surface mirrors `analytics::Analytics`, but `load` always fails with
+/// a structured error, which drives every caller onto the native Rust
+/// fallback path (same numbers, no PJRT).
+#[cfg(not(feature = "pjrt"))]
+pub mod analytics {
+    use super::RuntimeUnavailable;
+    use crate::methodology::locality::LocalityMetrics;
+    use crate::sim::Access;
+    use std::path::Path;
+
+    pub struct Analytics;
+
+    impl Analytics {
+        fn unavailable() -> RuntimeUnavailable {
+            RuntimeUnavailable(
+                "built without the `pjrt` feature; using the native Rust analytics".to_string(),
+            )
+        }
+
+        pub fn load(_dir: &Path) -> Result<Analytics, RuntimeUnavailable> {
+            Err(Self::unavailable())
+        }
+
+        pub fn locality(&self, _trace: &[Access]) -> Result<LocalityMetrics, RuntimeUnavailable> {
+            Err(Self::unavailable())
+        }
+
+        pub fn locality_of_words(
+            &self,
+            _words: &[u64],
+        ) -> Result<LocalityMetrics, RuntimeUnavailable> {
+            Err(Self::unavailable())
+        }
+
+        pub fn kmeans_step(
+            &self,
+            _points: &[Vec<f64>],
+            _centroids: &[Vec<f64>],
+        ) -> Result<(Vec<usize>, Vec<Vec<f64>>), RuntimeUnavailable> {
+            Err(Self::unavailable())
+        }
+
+        pub fn kmeans(
+            &self,
+            _points: &[Vec<f64>],
+            _k: usize,
+            _iters: usize,
+            _seed: u64,
+        ) -> Result<(Vec<usize>, Vec<Vec<f64>>), RuntimeUnavailable> {
+            Err(Self::unavailable())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use analytics::Analytics;

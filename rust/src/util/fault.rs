@@ -1,0 +1,272 @@
+//! Deterministic fault injection for robustness testing.
+//!
+//! Long characterization sweeps must survive panicking workers, torn
+//! writes, and slow I/O. This module lets tests (and brave users) inject
+//! those failures *deterministically* so the recovery paths — retry,
+//! checkpoint/resume, graceful degradation — can be exercised and the
+//! recovered results compared byte-for-byte against a fault-free run.
+//!
+//! Activation, in precedence order:
+//! 1. a programmatic override installed with [`set_override`] (tests);
+//! 2. the `DAMOV_FAULT_SPEC` environment variable, e.g.
+//!    `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,seed:42`.
+//!
+//! Determinism: every injection decision is a pure hash of
+//! `(seed, site, key, attempt)` — independent of thread scheduling. The
+//! *attempt* counter (per site/key, process-global) makes retries of the
+//! same job re-roll, so a bounded-retry loop converges instead of hitting
+//! the same injected panic forever. Because faults only abort or delay
+//! work — never alter computed values — a sweep that survives injection
+//! produces results identical to a clean sweep.
+//!
+//! Injection sites used across the crate:
+//! * `"sim"` — entry of `methodology::step3::profile_function` (panics
+//!   and latency; exercises `pool::par_map_catch` isolation + retry);
+//! * `"store"` — results-store writes (I/O errors; exercises atomic
+//!   save and checkpoint degradation);
+//! * `"pjrt-load"` — artifact loading (I/O errors; exercises the
+//!   native-analytics fallback).
+
+use crate::util::rng::mix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+
+/// Per-site fault probabilities plus the seed of the decision hash.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability that an instrumented site panics.
+    pub panic_p: f64,
+    /// Probability that an instrumented I/O site returns an error.
+    pub io_p: f64,
+    /// Probability that an instrumented site sleeps 1–5 ms.
+    pub delay_p: f64,
+    /// Seed of the deterministic decision hash.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse the `DAMOV_FAULT_SPEC` syntax: comma-separated
+    /// `kind:value` entries with kinds `panic`, `io`, `delay` (f64
+    /// probabilities in [0,1]) and `seed` (u64).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec entry {part:?} is not kind:value"))?;
+            match kind.trim() {
+                "seed" => {
+                    spec.seed = val
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|e| format!("bad seed {val:?}: {e}"))?;
+                }
+                kind @ ("panic" | "io" | "delay") => {
+                    let p = val
+                        .trim()
+                        .parse::<f64>()
+                        .map_err(|e| format!("bad probability {val:?}: {e}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("probability {p} for {kind:?} outside [0,1]"));
+                    }
+                    match kind {
+                        "panic" => spec.panic_p = p,
+                        "io" => spec.io_p = p,
+                        _ => spec.delay_p = p,
+                    }
+                }
+                other => return Err(format!("unknown fault kind {other:?}")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True if any fault kind can fire.
+    pub fn is_active(&self) -> bool {
+        self.panic_p > 0.0 || self.io_p > 0.0 || self.delay_p > 0.0
+    }
+}
+
+/// Marker embedded in every injected panic/error message, so handlers
+/// and panic hooks can tell injected faults from real ones.
+pub const FAULT_MARKER: &str = "damov-fault-injected";
+
+// Some(spec): forced on. None (initial): fall through to the env var.
+// Tests install overrides so parallel test binaries don't race on env.
+static OVERRIDE: RwLock<Option<FaultSpec>> = RwLock::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+fn attempts() -> &'static Mutex<HashMap<u64, u64>> {
+    static A: OnceLock<Mutex<HashMap<u64, u64>>> = OnceLock::new();
+    A.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Install a programmatic fault spec that takes precedence over the
+/// environment. Intended for tests.
+pub fn set_override(spec: Option<FaultSpec>) {
+    *OVERRIDE.write().unwrap() = spec;
+}
+
+/// Forget all per-site attempt counters (test hygiene: makes injection
+/// decisions start from attempt 0 again).
+pub fn reset_attempts() {
+    attempts().lock().unwrap().clear();
+}
+
+/// Total number of faults injected by this process so far.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// The active fault spec, if any: the override when installed, else a
+/// freshly parsed `DAMOV_FAULT_SPEC`. Malformed env specs are reported
+/// once per call and treated as inactive (a broken knob must not take
+/// down a clean sweep).
+pub fn current() -> Option<FaultSpec> {
+    if let Some(spec) = *OVERRIDE.read().unwrap() {
+        return spec.is_active().then_some(spec);
+    }
+    let raw = std::env::var("DAMOV_FAULT_SPEC").ok()?;
+    match FaultSpec::parse(&raw) {
+        Ok(spec) => spec.is_active().then_some(spec),
+        Err(e) => {
+            eprintln!("warning: ignoring malformed DAMOV_FAULT_SPEC: {e}");
+            None
+        }
+    }
+}
+
+/// Stable 64-bit key for a string identity (function code, path, ...).
+pub fn key_of(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn site_key(site: &str, key: u64) -> u64 {
+    mix64(key_of(site) ^ mix64(key))
+}
+
+/// Deterministic uniform draw in [0,1) for (spec.seed, site, key, kind,
+/// attempt). The attempt index is a process-global counter per
+/// (site, key, kind) so retries re-roll.
+fn draw(spec: &FaultSpec, site: &str, key: u64, kind_salt: u64) -> f64 {
+    let sk = site_key(site, key) ^ mix64(kind_salt);
+    let attempt = {
+        let mut m = attempts().lock().unwrap();
+        let c = m.entry(sk).or_insert(0);
+        let a = *c;
+        *c += 1;
+        a
+    };
+    let h = mix64(spec.seed ^ sk ^ mix64(attempt.wrapping_add(0x9E37_79B9_7F4A_7C15)));
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Panic (deterministically) with probability `panic_p` at this site.
+pub fn maybe_panic(site: &str, key: u64) {
+    if let Some(spec) = current() {
+        if spec.panic_p > 0.0 && draw(&spec, site, key, 1) < spec.panic_p {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            panic!("{FAULT_MARKER}: panic at site {site:?} (key {key:#x})");
+        }
+    }
+}
+
+/// Return an injected I/O error with probability `io_p` at this site.
+pub fn maybe_io(site: &str, key: u64) -> std::io::Result<()> {
+    if let Some(spec) = current() {
+        if spec.io_p > 0.0 && draw(&spec, site, key, 2) < spec.io_p {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("{FAULT_MARKER}: io error at site {site:?} (key {key:#x})"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Sleep 1–5 ms (deterministic duration) with probability `delay_p`.
+pub fn maybe_delay(site: &str, key: u64) {
+    if let Some(spec) = current() {
+        if spec.delay_p > 0.0 && draw(&spec, site, key, 3) < spec.delay_p {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            let ms = 1 + (site_key(site, key) % 5);
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse("panic:0.05, io:0.1,delay:0.2,seed:42").unwrap();
+        assert!((s.panic_p - 0.05).abs() < 1e-12);
+        assert!((s.io_p - 0.1).abs() < 1e-12);
+        assert!((s.delay_p - 0.2).abs() < 1e-12);
+        assert_eq!(s.seed, 42);
+        assert!(s.is_active());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("panic").is_err());
+        assert!(FaultSpec::parse("panic:1.5").is_err());
+        assert!(FaultSpec::parse("frobnicate:0.1").is_err());
+        assert!(FaultSpec::parse("seed:-1").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_inactive() {
+        let s = FaultSpec::parse("").unwrap();
+        assert!(!s.is_active());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_attempt() {
+        let spec = FaultSpec {
+            panic_p: 0.5,
+            seed: 7,
+            ..FaultSpec::default()
+        };
+        reset_attempts();
+        let a0 = draw(&spec, "unit-test-site", 11, 1);
+        let a1 = draw(&spec, "unit-test-site", 11, 1);
+        reset_attempts();
+        let b0 = draw(&spec, "unit-test-site", 11, 1);
+        let b1 = draw(&spec, "unit-test-site", 11, 1);
+        assert_eq!(a0.to_bits(), b0.to_bits());
+        assert_eq!(a1.to_bits(), b1.to_bits());
+        assert_ne!(a0.to_bits(), a1.to_bits(), "retries must re-roll");
+    }
+
+    #[test]
+    fn injection_rate_tracks_probability() {
+        let spec = FaultSpec {
+            io_p: 0.3,
+            seed: 99,
+            ..FaultSpec::default()
+        };
+        let mut hits = 0;
+        for key in 0..2000u64 {
+            if draw(&spec, "rate-site", key, 2) < spec.io_p {
+                hits += 1;
+            }
+        }
+        // 2000 Bernoulli(0.3) draws: expect ~600, allow wide slack.
+        assert!((450..750).contains(&hits), "hits={hits}");
+    }
+
+    #[test]
+    fn key_of_distinguishes_strings() {
+        assert_ne!(key_of("STRTriad"), key_of("STRCpy"));
+        assert_eq!(key_of("STRTriad"), key_of("STRTriad"));
+    }
+}

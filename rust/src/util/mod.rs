@@ -2,6 +2,7 @@
 //! only the `xla` crate closure — no serde/clap/rayon/criterion/proptest).
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod prop;

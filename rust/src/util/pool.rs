@@ -4,8 +4,10 @@
 //! across cores; each job is CPU-bound and seconds-long, so a simple
 //! work-stealing-free chunked scheduler with an atomic cursor is plenty.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Number of worker threads to use: the `DAMOV_THREADS` env var if set,
 /// otherwise available parallelism (min 1).
@@ -53,7 +55,131 @@ where
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker panicked before storing result"))
+        .enumerate()
+        .map(|(i, m)| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .unwrap_or_else(|| panic!("worker panicked while running job {i}/{n}"))
+        })
+        .collect()
+}
+
+/// A job that panicked on every attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobError {
+    /// Index of the failed item in the input slice.
+    pub index: usize,
+    /// Number of attempts made (1 + retries).
+    pub attempts: u32,
+    /// Panic payload of the last attempt, stringified.
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {} failed after {} attempt(s): {}",
+            self.index, self.attempts, self.message
+        )
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job with panic isolation and bounded retry. Backoff is
+/// exponential starting at 5 ms, capped at 200 ms — transient faults
+/// (I/O pressure, injected panics) clear quickly; deterministic bugs
+/// fail fast with their identity attached.
+fn run_caught<T, R, F>(items: &[T], i: usize, max_retries: u32, f: &F) -> Result<R, JobError>
+where
+    T: Sync,
+    F: Fn(&T) -> R + Sync,
+{
+    let mut attempt = 0u32;
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+            Ok(r) => return Ok(r),
+            Err(payload) => {
+                let message = panic_message(payload);
+                if attempt >= max_retries {
+                    return Err(JobError {
+                        index: i,
+                        attempts: attempt + 1,
+                        message,
+                    });
+                }
+                attempt += 1;
+                let backoff = (5u64 << attempt.min(6)).min(200);
+                std::thread::sleep(Duration::from_millis(backoff));
+            }
+        }
+    }
+}
+
+/// Fallible sibling of [`par_map`]: apply `f` to every item in parallel,
+/// catching worker panics instead of aborting the whole map. Each result
+/// slot reports either the value or a [`JobError`] naming the failed
+/// item, so one bad job costs one record, not the whole sweep. Panicking
+/// jobs are retried up to `max_retries` times with exponential backoff
+/// before being recorded as failed. Order is preserved.
+pub fn par_map_catch<T, R, F>(
+    items: &[T],
+    threads: usize,
+    max_retries: u32,
+    f: F,
+) -> Vec<Result<R, JobError>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(|i| run_caught(items, i, max_retries, &f)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<R, JobError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_caught(items, i, max_retries, &f);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, m)| {
+            // Every slot is filled: run_caught traps panics, so workers
+            // always store a Result before moving on.
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .unwrap_or_else(|| {
+                    unreachable!("job {i}/{n}: worker exited without storing a result")
+                })
+        })
         .collect()
 }
 
@@ -105,6 +231,66 @@ mod tests {
     #[test]
     fn range_variant() {
         assert_eq!(par_map_range(5, 3, |i| i * i), vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn catch_reports_failed_job_identity() {
+        let items: Vec<u32> = (0..20).collect();
+        let out = par_map_catch(&items, 4, 1, |&x| {
+            if x == 7 {
+                panic!("item seven is cursed");
+            }
+            x * 2
+        });
+        assert_eq!(out.len(), 20);
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                let e = r.as_ref().unwrap_err();
+                assert_eq!(e.index, 7);
+                assert_eq!(e.attempts, 2);
+                assert!(e.message.contains("cursed"), "message={}", e.message);
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as u32 * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn catch_retry_clears_transient_panics() {
+        use std::sync::atomic::AtomicU32;
+        let first_try = AtomicU32::new(0);
+        let items: Vec<u32> = (0..8).collect();
+        let out = par_map_catch(&items, 4, 2, |&x| {
+            if x == 3 && first_try.fetch_add(1, Ordering::Relaxed) == 0 {
+                panic!("transient");
+            }
+            x + 1
+        });
+        let vals: Vec<u32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn catch_preserves_order_and_handles_empty() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map_catch(&empty, 4, 0, |&x| x).is_empty());
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map_catch(&items, 8, 0, |&x| x * x);
+        let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn catch_single_thread_path_isolates_panics() {
+        let items: Vec<u32> = (0..4).collect();
+        let out = par_map_catch(&items, 1, 0, |&x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        assert!(out[2].is_err());
+        assert_eq!(out.iter().filter(|r| r.is_ok()).count(), 3);
     }
 
     #[test]

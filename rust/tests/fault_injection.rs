@@ -1,0 +1,133 @@
+//! End-to-end fault-tolerance proof (ISSUE acceptance criterion): a
+//! characterization sweep running under ~10% injected panics and I/O
+//! errors must converge — with bounded retries — to results
+//! byte-identical to a clean sweep, and a sweep killed mid-run must be
+//! resumable, recomputing only the unfinished functions.
+//!
+//! This file deliberately contains a SINGLE `#[test]`: the fault
+//! override, the per-site attempt counters, and the profile-call
+//! counter are process-global, so sharing the process with other tests
+//! would race. Everything sequential lives here, in order.
+
+use damov::coordinator::{store, sweep_fingerprint, Coordinator};
+use damov::methodology::step3::{profile_call_count, FunctionProfile, SweepOptions};
+use damov::util::fault::{self, FaultSpec};
+use damov::workloads::{registry, Scale};
+
+/// Canonical byte-level serialization of a result set, for
+/// byte-identical comparison across runs.
+fn serialize(ps: &[FunctionProfile]) -> String {
+    ps.iter()
+        .map(|p| store::profile_to_json(p).to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
+    let dir = std::env::temp_dir().join(format!("damov-fi-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let specs: Vec<_> = registry::representatives().into_iter().take(4).collect();
+    let opt = SweepOptions {
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+
+    // Injected panics are expected and caught; keep them out of the test
+    // output. Real panics (e.g. assertion failures) still reach the
+    // previous hook.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = info
+            .payload()
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| info.payload().downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        if !msg.contains(fault::FAULT_MARKER) {
+            prev_hook(info);
+        }
+    }));
+
+    // --- 1. The env-var activation path parses and deactivates. -------
+    std::env::set_var("DAMOV_FAULT_SPEC", "panic:0.5,io:0.25,seed:42");
+    let s = fault::current().expect("DAMOV_FAULT_SPEC must activate injection");
+    assert!((s.panic_p - 0.5).abs() < 1e-12);
+    assert!((s.io_p - 0.25).abs() < 1e-12);
+    assert_eq!(s.seed, 42);
+    std::env::remove_var("DAMOV_FAULT_SPEC");
+    assert!(fault::current().is_none(), "no spec, no faults");
+
+    // --- 2. Injection verifiably fires under an override. -------------
+    fault::reset_attempts();
+    fault::set_override(Some(FaultSpec {
+        io_p: 0.5,
+        seed: 1234,
+        ..Default::default()
+    }));
+    let before = fault::injected_count();
+    let fired = (0..200u64)
+        .filter(|&k| fault::maybe_io("probe", k).is_err())
+        .count();
+    assert!((50..150).contains(&fired), "io faults at p=0.5: fired={fired}");
+    assert_eq!(fault::injected_count() - before, fired as u64);
+
+    // --- 3. Clean baseline sweep. --------------------------------------
+    fault::set_override(None);
+    let clean = Coordinator::new(&dir, 4).profiles("clean", &specs, opt, true);
+    assert_eq!(clean.len(), 4);
+
+    // --- 4. Sweep under ~10% faults converges byte-identically. --------
+    fault::reset_attempts();
+    fault::set_override(Some(FaultSpec {
+        panic_p: 0.1,
+        io_p: 0.1,
+        delay_p: 0.2,
+        seed: 1234,
+    }));
+    let faulty = Coordinator::new(&dir, 4)
+        .with_recovery(8, false)
+        .profiles("fi", &specs, opt, true);
+    fault::set_override(None);
+    assert_eq!(
+        faulty.len(),
+        4,
+        "8 retries at p=0.1 must push every function through"
+    );
+    assert_eq!(
+        serialize(&clean),
+        serialize(&faulty),
+        "fault-injected sweep must converge to byte-identical profiles"
+    );
+
+    // --- 5. A killed sweep resumes, recomputing only the rest. ---------
+    // Emulate a sweep killed after 2 of 4 functions: a checkpoint holding
+    // the first two records and no cache file for its tag.
+    let fp = sweep_fingerprint(&specs, &opt);
+    let ck = dir.join("checkpoint-res.jsonl");
+    let w = store::CheckpointWriter::create(&ck, &fp, false).unwrap();
+    w.append(&clean[0]).unwrap();
+    w.append(&clean[1]).unwrap();
+    drop(w);
+
+    let calls_before = profile_call_count();
+    let resumed = Coordinator::new(&dir, 2)
+        .with_recovery(0, true)
+        .profiles("res", &specs, opt, false);
+    assert_eq!(
+        profile_call_count() - calls_before,
+        2,
+        "resume must recompute only the 2 unfinished functions"
+    );
+    assert_eq!(resumed.len(), 4);
+    assert_eq!(
+        serialize(&clean),
+        serialize(&resumed),
+        "resumed sweep must equal the clean sweep"
+    );
+    // Completed: cache written and keyed, checkpoint retired.
+    assert!(!ck.exists());
+    assert!(store::load_profiles_keyed(&dir.join("profiles-res.json"), &fp).is_some());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,7 +3,11 @@
 //! workload traces. This closes the three-layer loop:
 //! Pallas kernel == jnp ref (pytest) == Rust oracle (here) == artifact.
 //!
-//! Requires `make artifacts` (skips with a notice otherwise).
+//! Requires `make artifacts` (skips with a notice otherwise) and a build
+//! with `--features pjrt`; the default offline build ships the stub
+//! runtime whose `load` always degrades to the native Rust path, so the
+//! whole file is compiled out.
+#![cfg(feature = "pjrt")]
 
 use damov::methodology::{cluster, locality};
 use damov::runtime::{artifact, Analytics};
