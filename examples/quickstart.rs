@@ -41,4 +41,8 @@ fn main() {
         "\nExpected shape (paper §3.3.1): the host saturates its off-chip link at\n\
          ~64 cores while NDP keeps scaling on internal bandwidth (up to ~4x)."
     );
+
+    // Every simulate() call above fed the telemetry registry; dump it.
+    println!("\n--- telemetry snapshot ---");
+    print!("{}", damov::util::telemetry::metrics::render_text());
 }

@@ -24,6 +24,8 @@ use crate::methodology::step3::{
     profile_all_checkpointed, FunctionProfile, ProfileError, SweepOptions,
 };
 use crate::sim::{CoreModel, CORE_SWEEP};
+use crate::util::json::Json;
+use crate::util::telemetry::{self, metrics};
 use crate::workloads::{registry, FunctionSpec, Scale};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -106,6 +108,13 @@ impl Coordinator {
         refresh: bool,
     ) -> Vec<FunctionProfile> {
         let fingerprint = sweep_fingerprint(specs, &opt);
+        let _sweep_span = telemetry::span_args(
+            "sweep",
+            vec![
+                ("tag".to_string(), Json::from(tag)),
+                ("functions".to_string(), Json::from(specs.len())),
+            ],
+        );
         let path = self.cache_path(tag);
         if !refresh {
             if let Some(cached) = store::load_profiles_keyed(&path, &fingerprint) {
@@ -123,11 +132,19 @@ impl Coordinator {
                 done.insert(p.code.clone(), p);
             }
             if !done.is_empty() {
-                eprintln!(
-                    "[damov] resume: {}/{} functions recovered from {}",
-                    done.len(),
-                    specs.len(),
-                    ckpt_path.display()
+                // Seed the registry with the interrupted run's counters so
+                // `damov report telemetry` shows cumulative counts.
+                if let Some(snap) = store::load_checkpoint_metrics(&ckpt_path, &fingerprint) {
+                    metrics::absorb(&snap);
+                }
+                metrics::counter("sweep.functions_recovered").add(done.len() as u64);
+                telemetry::info(
+                    "resume",
+                    &[
+                        ("recovered", Json::from(done.len())),
+                        ("total", Json::from(specs.len())),
+                        ("checkpoint", Json::from(ckpt_path.display().to_string())),
+                    ],
                 );
             }
         }
@@ -145,9 +162,14 @@ impl Coordinator {
             {
                 Ok(w) => Some(w),
                 Err(e) => {
-                    eprintln!(
-                        "warning: [degraded] component=checkpoint detail=\"{e}\" \
-                         (sweep continues without crash recovery)"
+                    telemetry::warn(
+                        "degraded",
+                        &[
+                            ("component", Json::from("checkpoint")),
+                            ("detail", Json::from(format!(
+                                "{e} (sweep continues without crash recovery)"
+                            ))),
+                        ],
                     );
                     None
                 }
@@ -155,7 +177,17 @@ impl Coordinator {
             let results = profile_all_checkpointed(&todo, opt, self.threads, self.max_retries, |p| {
                 if let Some(w) = &writer {
                     if let Err(e) = w.append(p) {
-                        eprintln!("warning: [degraded] component=checkpoint detail=\"{e}\"");
+                        telemetry::warn(
+                            "degraded",
+                            &[
+                                ("component", Json::from("checkpoint")),
+                                ("detail", Json::from(e.to_string())),
+                            ],
+                        );
+                    } else {
+                        // Cumulative counters ride along with every record so
+                        // a crash leaves them for --resume to absorb.
+                        let _ = w.append_metrics(&metrics::snapshot());
                     }
                 }
             });
@@ -177,21 +209,38 @@ impl Coordinator {
 
         if failures.is_empty() && profiles.len() == specs.len() {
             if let Err(e) = store::save_profiles_keyed(&path, &profiles, &fingerprint) {
-                eprintln!("warning: could not persist profiles to {path:?}: {e}");
+                telemetry::warn(
+                    "store",
+                    &[("detail", Json::from(format!(
+                        "could not persist profiles to {path:?}: {e}"
+                    )))],
+                );
             } else {
                 // The cache now holds everything; the checkpoint is spent.
                 std::fs::remove_file(&ckpt_path).ok();
             }
         } else {
-            eprintln!(
-                "warning: [degraded] component=sweep tag={tag} detail=\"{} of {} functions \
-                 failed; checkpoint kept for --resume\"",
-                specs.len() - profiles.len(),
-                specs.len()
-            );
+            metrics::counter("sweep.functions_failed").add(failures.len() as u64);
             for e in &failures {
-                eprintln!("warning:   {e}");
+                telemetry::error(
+                    "job-failed",
+                    &[
+                        ("code", Json::from(e.code.as_str())),
+                        ("attempts", Json::from(e.attempts as u64)),
+                        ("error", Json::from(e.message.as_str())),
+                    ],
+                );
             }
+            telemetry::warn(
+                "degraded",
+                &[
+                    ("component", Json::from("sweep")),
+                    ("tag", Json::from(tag)),
+                    ("failed", Json::from(specs.len() - profiles.len())),
+                    ("total", Json::from(specs.len())),
+                    ("detail", Json::from("checkpoint kept for --resume")),
+                ],
+            );
         }
         profiles
     }

@@ -753,6 +753,17 @@ pub fn sweep_health(
     out
 }
 
+/// Telemetry snapshot: every registered counter, gauge and histogram of
+/// this process. After a sweep this covers sim throughput, cache/DRAM
+/// totals, retries, injected faults, checkpoint flushes, and span
+/// durations; on `--resume` the counts are cumulative across the
+/// interrupted run (absorbed from the checkpoint's metrics snapshot).
+pub fn telemetry_report() -> String {
+    let mut out = String::from("Telemetry: metrics snapshot (see docs/telemetry.md)\n\n");
+    out.push_str(&crate::util::telemetry::metrics::render_text());
+    out
+}
+
 /// Table 8 / Appendix A: the full function list with classes.
 pub fn tab8(reps: &[FunctionProfile], holdout: &[FunctionProfile]) -> String {
     let mut t = Table::new(

@@ -31,6 +31,7 @@ use crate::sim::engine::SimResult;
 use crate::sim::{CoreModel, SystemKind};
 use crate::util::fault;
 use crate::util::json::Json;
+use crate::util::telemetry::{self, metrics};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -340,6 +341,7 @@ pub fn save_profiles_keyed(
     profiles: &[FunctionProfile],
     fingerprint: &str,
 ) -> std::io::Result<()> {
+    let _span = telemetry::span("store.save");
     fault::maybe_io("store", fault::key_of(&path.to_string_lossy()))?;
     let mut root = Json::obj();
     root.set("schema", SCHEMA_VERSION)
@@ -348,7 +350,9 @@ pub fn save_profiles_keyed(
             "records",
             Json::Arr(profiles.iter().map(record_to_json).collect()),
         );
-    write_atomic(path, &root.to_string_pretty())
+    write_atomic(path, &root.to_string_pretty())?;
+    metrics::counter("store.cache_saves").incr();
+    Ok(())
 }
 
 /// [`save_profiles_keyed`] with an empty fingerprint (ad-hoc dumps).
@@ -395,10 +399,15 @@ pub fn load_profiles(path: &Path) -> Option<Vec<FunctionProfile>> {
 /// cache bug: a file whose *length* happens to match but whose specs or
 /// options differ is rejected instead of silently served.
 pub fn load_profiles_keyed(path: &Path, fingerprint: &str) -> Option<Vec<FunctionProfile>> {
+    let _span = telemetry::span("store.load");
     let text = std::fs::read_to_string(path).ok()?;
     let j = Json::parse(&text).ok()?;
     let (fp, profiles) = parse_v2(&j)?;
-    (fp == fingerprint).then_some(profiles)
+    let hit = (fp == fingerprint).then_some(profiles);
+    if hit.is_some() {
+        metrics::counter("store.cache_hits").incr();
+    }
+    hit
 }
 
 /// Append-only crash-safe sweep checkpoint (JSON-lines; see module docs).
@@ -438,8 +447,26 @@ impl CheckpointWriter {
     /// Append one completed profile, flushed immediately: a crash loses
     /// at most the record being written, never an earlier one.
     pub fn append(&self, p: &FunctionProfile) -> std::io::Result<()> {
+        let _span = telemetry::span("store.checkpoint_append");
         fault::maybe_io("store", fault::key_of(&p.code))?;
         let line = record_to_json(p).to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()?;
+        metrics::counter("store.checkpoint_appends").incr();
+        Ok(())
+    }
+
+    /// Append a metrics snapshot line (`{"checksum":..,"metrics":{..}}`).
+    /// Written after each profile so a crashed sweep still leaves its
+    /// cumulative counters behind; [`load_checkpoint`] skips these lines
+    /// and [`load_checkpoint_metrics`] returns the newest intact one.
+    pub fn append_metrics(&self, snap: &Json) -> std::io::Result<()> {
+        let sum = checksum_hex(&snap.to_string_compact());
+        let mut j = Json::obj();
+        j.set("checksum", sum).set("metrics", snap.clone());
+        let line = j.to_string_compact();
         let mut f = self.file.lock().unwrap();
         f.write_all(line.as_bytes())?;
         f.write_all(b"\n")?;
@@ -447,38 +474,72 @@ impl CheckpointWriter {
     }
 }
 
+/// Decode + verify one metrics snapshot line; `None` unless the line is
+/// a metrics record with an intact checksum.
+fn metrics_from_json(j: &Json) -> Option<Json> {
+    let sum = j.get("checksum")?.as_str()?;
+    let snap = j.get("metrics")?;
+    (checksum_hex(&snap.to_string_compact()) == sum).then(|| snap.clone())
+}
+
+/// Read a checkpoint's body lines if its header matches (schema +
+/// fingerprint). Missing file or foreign header → `None`.
+fn checkpoint_body(path: &Path, fingerprint: &str) -> Option<String> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut lines = text.lines();
+    let first = lines.next()?;
+    let hdr = Json::parse(first).ok()?;
+    let schema_ok =
+        hdr.get("schema").and_then(Json::as_f64).map(|s| s as u64) == Some(SCHEMA_VERSION);
+    let fp_ok = hdr.get("fingerprint").and_then(Json::as_str) == Some(fingerprint);
+    (schema_ok && fp_ok).then(|| lines.collect::<Vec<_>>().join("\n"))
+}
+
 /// Load every intact record of a checkpoint with a matching header
 /// (schema + fingerprint). Missing file or foreign header → empty.
+/// Interleaved metrics snapshot lines (see
+/// [`CheckpointWriter::append_metrics`]) are verified and skipped.
 /// Decoding stops at the first torn or corrupt line: everything before
 /// it is checksum-verified and trusted, everything after is dropped and
 /// will be recomputed.
 pub fn load_checkpoint(path: &Path, fingerprint: &str) -> Vec<FunctionProfile> {
-    let Ok(text) = std::fs::read_to_string(path) else {
+    let Some(body) = checkpoint_body(path, fingerprint) else {
         return Vec::new();
     };
-    let mut lines = text.lines();
-    let Some(first) = lines.next() else {
-        return Vec::new();
-    };
-    let Ok(hdr) = Json::parse(first) else {
-        return Vec::new();
-    };
-    let schema_ok =
-        hdr.get("schema").and_then(Json::as_f64).map(|s| s as u64) == Some(SCHEMA_VERSION);
-    let fp_ok = hdr.get("fingerprint").and_then(Json::as_str) == Some(fingerprint);
-    if !schema_ok || !fp_ok {
-        return Vec::new();
-    }
     let mut out = Vec::new();
-    for line in lines {
+    for line in body.lines() {
         if line.trim().is_empty() {
             continue;
         }
         let Ok(j) = Json::parse(line) else { break };
+        if j.get("metrics").is_some() {
+            if metrics_from_json(&j).is_some() {
+                continue;
+            }
+            break; // corrupt metrics line: distrust the rest
+        }
         let Some(p) = record_from_json(&j) else { break };
         out.push(p);
     }
     out
+}
+
+/// The newest intact metrics snapshot of a checkpoint with a matching
+/// header, if any. Used by `--resume` to seed the metrics registry so
+/// `damov report telemetry` shows cumulative (not per-run) counts.
+pub fn load_checkpoint_metrics(path: &Path, fingerprint: &str) -> Option<Json> {
+    let body = checkpoint_body(path, fingerprint)?;
+    let mut last = None;
+    for line in body.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { break };
+        if let Some(snap) = metrics_from_json(&j) {
+            last = Some(snap);
+        }
+    }
+    last
 }
 
 #[cfg(test)]

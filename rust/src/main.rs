@@ -37,10 +37,13 @@ use damov::methodology::step3::{profile_function, SweepOptions};
 use damov::runtime::{artifact, Analytics};
 use damov::sim::{simulate, CoreModel, SystemConfig, SystemKind};
 use damov::util::cli::Args;
+use damov::util::json::Json;
 use damov::util::pool::default_threads;
+use damov::util::telemetry;
 use damov::workloads::{registry, Scale};
 
 fn main() {
+    telemetry::init_from_env();
     let args = Args::parse(
         std::env::args().skip(1),
         &["refresh", "inorder", "no-artifacts", "resume"],
@@ -62,6 +65,8 @@ fn main() {
             usage();
         }
     }
+    // Export the Chrome trace (DAMOV_TRACE) after the command finishes.
+    telemetry::flush();
 }
 
 fn usage() {
@@ -71,8 +76,12 @@ fn usage() {
          robustness: --resume (continue an interrupted sweep from its checkpoint)\n\
          \x20           --max-retries N (retries per panicking worker job, default 2)\n\
          \x20           DAMOV_FAULT_SPEC=panic:P,io:P,delay:P,seed:S (deterministic fault injection)\n\
+         telemetry: DAMOV_TRACE=trace.json (Chrome/Perfetto trace)\n\
+         \x20          DAMOV_LOG=events.jsonl|- (structured JSONL event log)\n\
+         \x20          DAMOV_LOG_LEVEL=error|warn|info|debug (default info)\n\
          see `damov report all --threads 16` to regenerate every figure,\n\
-         `damov report health` for sweep coverage after a degraded run"
+         `damov report health` for sweep coverage after a degraded run,\n\
+         `damov report telemetry` for the metrics snapshot (docs/telemetry.md)"
     );
 }
 
@@ -159,7 +168,10 @@ fn cmd_step1(args: &Args) {
     let scale = Scale(args.opt_f64("scale", 0.25));
     let threads = args.opt_usize("threads", default_threads());
     let specs = registry::all_functions();
-    eprintln!("[damov] step-1 scan over {} functions...", specs.len());
+    telemetry::info(
+        "progress",
+        &[("msg", Json::from(format!("step-1 scan over {} functions...", specs.len())))],
+    );
     let mut results = damov::methodology::step1::filter_memory_bound(&specs, scale, threads);
     results.sort_by(|a, b| b.memory_bound.partial_cmp(&a.memory_bound).unwrap());
     println!("{:28} {:>12}  {}", "function", "mem-bound %", "selected(>30%)");
@@ -268,10 +280,10 @@ fn cmd_characterize(args: &Args) {
     );
 }
 
-const ALL_REPORTS: [&str; 26] = [
+const ALL_REPORTS: [&str; 27] = [
     "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig22",
-    "fig23", "fig24", "tab8", "validation", "health",
+    "fig23", "fig24", "tab8", "validation", "health", "telemetry",
 ];
 
 fn cmd_report(args: &Args) {
@@ -294,19 +306,29 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         .with_recovery(args.opt_u64("max-retries", 2) as u32, args.flag("resume"));
     let scale = Scale(args.opt_f64("scale", 1.0));
 
-    let needs_reps = wanted.iter().any(|w| !matches!(*w, "tab1" | "fig22"));
+    let needs_reps = wanted
+        .iter()
+        .any(|w| !matches!(*w, "tab1" | "fig22" | "telemetry"));
     let needs_holdout = wanted
         .iter()
         .any(|w| matches!(*w, "fig18" | "tab8" | "validation" | "val"));
 
     let reps = if needs_reps {
-        eprintln!("[damov] profiling 44 representatives ({threads} threads)...");
+        telemetry::info(
+            "progress",
+            &[("msg", Json::from(format!(
+                "profiling 44 representatives ({threads} threads)..."
+            )))],
+        );
         coord.representative_profiles(refresh)
     } else {
         Vec::new()
     };
     let holdout = if needs_holdout {
-        eprintln!("[damov] profiling 100 held-out variants...");
+        telemetry::info(
+            "progress",
+            &[("msg", Json::from("profiling 100 held-out variants..."))],
+        );
         coord.holdout_profiles(refresh)
     } else {
         Vec::new()
@@ -354,6 +376,7 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
             "tab8" => reports::tab8(&reps, &holdout),
             "validation" | "val" => reports::validation(&reps, &holdout),
             "health" => reports::sweep_health(&registry::representatives(), &reps),
+            "telemetry" => reports::telemetry_report(),
             other => {
                 eprintln!("unknown report {other:?}");
                 continue;
@@ -362,7 +385,10 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         println!("{text}");
         let path = results_dir.join(format!("{name}.txt"));
         if let Err(e) = std::fs::write(&path, &text) {
-            eprintln!("warning: could not write {path:?}: {e}");
+            telemetry::warn(
+                "store",
+                &[("detail", Json::from(format!("could not write {path:?}: {e}")))],
+            );
         }
     }
 }

@@ -10,7 +10,9 @@
 use super::locality::{locality, LocalityMetrics};
 use crate::sim::{simulate, CoreModel, SimResult, SystemConfig, SystemKind, CORE_SWEEP};
 use crate::util::fault;
+use crate::util::json::Json;
 use crate::util::pool::par_map_catch;
+use crate::util::telemetry::{self, metrics};
 use crate::workloads::{FunctionSpec, Scale};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -124,6 +126,11 @@ impl Default for SweepOptions {
 /// Simulate every (system, model, cores) point for one function.
 pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfile {
     PROFILE_CALLS.fetch_add(1, Ordering::Relaxed);
+    metrics::counter("sweep.functions_profiled").incr();
+    let _span = telemetry::span_args(
+        "profile",
+        vec![("code".to_string(), Json::from(spec.id.code()))],
+    );
     // Deterministic fault-injection boundary for the whole simulation of
     // one function (active only under DAMOV_FAULT_SPEC / test override).
     let fault_key = fault::key_of(&spec.id.code());
@@ -138,7 +145,16 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
     // once and shared (borrowed, not cloned) by every system/model run.
     let mut runs = Vec::with_capacity(opt.core_models.len() * kinds.len() * CORE_SWEEP.len());
     for &cores in CORE_SWEEP.iter() {
-        let trace = spec.trace(cores, opt.scale);
+        let trace = {
+            let _gen = telemetry::span_args(
+                "trace-gen",
+                vec![
+                    ("code".to_string(), Json::from(spec.id.code())),
+                    ("cores".to_string(), Json::from(cores)),
+                ],
+            );
+            spec.trace(cores, opt.scale)
+        };
         for &model in opt.core_models {
             for &kind in &kinds {
                 let cfg = SystemConfig::by_kind(kind, cores, model);

@@ -25,8 +25,21 @@ pub use artifact::{Artifact, PjrtContext};
 
 /// Emit a structured degradation warning: machine-grepable `key=value`
 /// fields naming the failed component, the fallback taken, and why.
+/// Routed through `util::telemetry` (text rendering keeps the legacy
+/// `warning: [degraded] ...` stderr format) and counted in the
+/// `runtime.degradations` metric.
 pub fn degraded(component: &str, fallback: &str, detail: impl std::fmt::Display) {
-    eprintln!("warning: [degraded] component={component} fallback={fallback} detail=\"{detail}\"");
+    use crate::util::json::Json;
+    use crate::util::telemetry;
+    telemetry::metrics::counter("runtime.degradations").incr();
+    telemetry::warn(
+        "degraded",
+        &[
+            ("component", Json::from(component)),
+            ("fallback", Json::from(fallback)),
+            ("detail", Json::from(detail.to_string())),
+        ],
+    );
 }
 
 /// Error produced by the stub runtime when the crate is built without

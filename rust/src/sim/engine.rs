@@ -27,6 +27,8 @@ use super::energy::{energy, EnergyBreakdown, EnergyEvents};
 use super::noc::{HopHistogram, Mesh};
 use super::prefetcher::StreamPrefetcher;
 use super::{Access, Trace};
+use crate::util::json::Json;
+use crate::util::telemetry::{self, metrics};
 
 /// Service level of a load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -150,8 +152,21 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
     );
     let n = cfg.cores;
     let line = cfg.l1.line_bytes as u64;
+    let total_accesses: usize = trace.iter().map(|t| t.len()).sum();
+    let _sim_span = telemetry::span_args(
+        "simulate",
+        vec![
+            ("kind".to_string(), Json::from(format!("{:?}", cfg.kind))),
+            ("cores".to_string(), Json::from(n)),
+            ("accesses".to_string(), Json::from(total_accesses)),
+        ],
+    );
+    metrics::counter("sim.runs").incr();
+    metrics::counter("sim.accesses").add(total_accesses as u64);
 
     // --- Phase 1: replay ---
+    let replay_t0 = std::time::Instant::now();
+    let replay_span = telemetry::span("replay");
     let mut l1s: Vec<Cache> = (0..n).map(|_| Cache::new(&cfg.l1)).collect();
     let mut l2s: Vec<Option<Cache>> = (0..n).map(|_| cfg.l2.as_ref().map(Cache::new)).collect();
     let mut l3 = cfg.l3.as_ref().map(Cache::new);
@@ -225,17 +240,32 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
         }
     }
 
+    drop(replay_span);
+    {
+        let secs = replay_t0.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            metrics::histogram("sim.replay_acc_per_s")
+                .record((total_accesses as f64 / secs) as u64);
+        }
+    }
+
     // Aggregate cache counters.
     let l1_hits: u64 = l1s.iter().map(|c| c.hits).sum();
     let l1_misses: u64 = l1s.iter().map(|c| c.misses).sum();
     let l2_hits: u64 = l2s.iter().flatten().map(|c| c.hits).sum();
     let l2_misses: u64 = l2s.iter().flatten().map(|c| c.misses).sum();
-    let (l3_hits, l3_misses) = l3
-        .as_ref()
-        .map(|c| (c.hits, c.misses))
-        .unwrap_or((0, 0));
+    let (l3_hits, l3_misses) = l3.as_ref().map(|c| (c.hits, c.misses)).unwrap_or((0, 0));
+    metrics::counter("sim.l1_hits").add(l1_hits);
+    metrics::counter("sim.l1_misses").add(l1_misses);
+    metrics::counter("sim.l2_hits").add(l2_hits);
+    metrics::counter("sim.l2_misses").add(l2_misses);
+    metrics::counter("sim.l3_hits").add(l3_hits);
+    metrics::counter("sim.l3_misses").add(l3_misses);
+    metrics::counter("sim.dram_reads").add(dram.stats.reads);
+    metrics::counter("sim.dram_writes").add(dram.stats.writes);
 
     // --- Phase 2: timing fixed point ---
+    let timing_span = telemetry::span("timing");
     let instr: u64 = agg.iter().map(|a| a.instr).sum();
     let total_loads: u64 = agg.iter().map(|a| a.loads).sum();
     let width = cfg.issue_width as f64;
@@ -331,7 +361,9 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
         max_cycles
     };
 
+    let mut fp_iters = 0u64;
     for _ in 0..12 {
+        fp_iters += 1;
         let new_time = stall_cycles(dram_lat, noc_queue).max(bw_floor_cycles);
         rho = (dram_bytes / (new_time / cfg.freq_hz)) / peak_bw;
         let rho_fb = rho.min(0.75); // timing feedback cap (self-regulation)
@@ -358,11 +390,13 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
     }
     // Reported loaded latency reflects true utilization (saturated queues).
     dram_lat = base_dram + mean_service + dram_extra + md1_wait(mean_service, rho);
+    metrics::histogram("sim.fixedpoint_iters").record(fp_iters);
+    drop(timing_span);
 
-    if std::env::var("DAMOV_DEBUG").is_ok() {
+    if telemetry::log::enabled(telemetry::Level::Debug) {
         for (i, a) in agg.iter().enumerate().take(2) {
-            eprintln!(
-                "[debug] core{i}: instr={} loads={} cnt_indep={:?} cnt_dep={:?} pf=({},{}) \
+            let detail = format!(
+                "instr={} loads={} cnt_indep={:?} cnt_dep={:?} pf=({},{}) \
                  lat=[{lat_l1},{lat_l2},{lat_l3_base},{dram_lat:.0}] svc={mean_service:.0} time={time_cycles:.0} \
                  stall_at_dlat={:.0} floor={bw_floor_cycles:.0}",
                 a.instr,
@@ -372,6 +406,10 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
                 a.pf_hit_l3,
                 a.pf_hit_dram,
                 stall_cycles(dram_lat, noc_queue),
+            );
+            telemetry::debug(
+                "sim-core",
+                &[("core", Json::from(i)), ("detail", Json::from(detail))],
             );
         }
     }

@@ -27,7 +27,9 @@
 //! * `"pjrt-load"` — artifact loading (I/O errors; exercises the
 //!   native-analytics fallback).
 
+use crate::util::json::Json;
 use crate::util::rng::mix64;
+use crate::util::telemetry::{self, metrics, Level};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock, RwLock};
@@ -131,7 +133,10 @@ pub fn current() -> Option<FaultSpec> {
     match FaultSpec::parse(&raw) {
         Ok(spec) => spec.is_active().then_some(spec),
         Err(e) => {
-            eprintln!("warning: ignoring malformed DAMOV_FAULT_SPEC: {e}");
+            telemetry::warn(
+                "fault-spec",
+                &[("detail", Json::from(format!("ignoring malformed DAMOV_FAULT_SPEC: {e}")))],
+            );
             None
         }
     }
@@ -152,8 +157,9 @@ fn site_key(site: &str, key: u64) -> u64 {
 
 /// Deterministic uniform draw in [0,1) for (spec.seed, site, key, kind,
 /// attempt). The attempt index is a process-global counter per
-/// (site, key, kind) so retries re-roll.
-fn draw(spec: &FaultSpec, site: &str, key: u64, kind_salt: u64) -> f64 {
+/// (site, key, kind) so retries re-roll. Returns the draw and the
+/// attempt index it was made for.
+fn draw(spec: &FaultSpec, site: &str, key: u64, kind_salt: u64) -> (f64, u64) {
     let sk = site_key(site, key) ^ mix64(kind_salt);
     let attempt = {
         let mut m = attempts().lock().unwrap();
@@ -163,15 +169,47 @@ fn draw(spec: &FaultSpec, site: &str, key: u64, kind_salt: u64) -> f64 {
         a
     };
     let h = mix64(spec.seed ^ sk ^ mix64(attempt.wrapping_add(0x9E37_79B9_7F4A_7C15)));
-    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64), attempt)
+}
+
+/// Record one injection decision as telemetry: counters plus a
+/// structured event (injections at info, passes at debug) so a faulted
+/// run's event log fully explains its retries.
+fn record_decision(kind: &'static str, site: &str, key: u64, attempt: u64, inject: bool) {
+    metrics::counter("fault.decisions").incr();
+    let level = if inject {
+        metrics::counter(&format!("fault.injected_{kind}")).incr();
+        Level::Info
+    } else {
+        Level::Debug
+    };
+    if !telemetry::log::enabled(level) {
+        return;
+    }
+    telemetry::log::emit(
+        level,
+        "fault",
+        &[
+            ("kind", Json::from(kind)),
+            ("site", Json::from(site)),
+            ("key", Json::from(format!("{key:#x}"))),
+            ("attempt", Json::from(attempt)),
+            ("verdict", Json::from(if inject { "inject" } else { "pass" })),
+        ],
+    );
 }
 
 /// Panic (deterministically) with probability `panic_p` at this site.
 pub fn maybe_panic(site: &str, key: u64) {
     if let Some(spec) = current() {
-        if spec.panic_p > 0.0 && draw(&spec, site, key, 1) < spec.panic_p {
-            INJECTED.fetch_add(1, Ordering::Relaxed);
-            panic!("{FAULT_MARKER}: panic at site {site:?} (key {key:#x})");
+        if spec.panic_p > 0.0 {
+            let (v, attempt) = draw(&spec, site, key, 1);
+            let inject = v < spec.panic_p;
+            record_decision("panic", site, key, attempt, inject);
+            if inject {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                panic!("{FAULT_MARKER}: panic at site {site:?} (key {key:#x})");
+            }
         }
     }
 }
@@ -179,12 +217,17 @@ pub fn maybe_panic(site: &str, key: u64) {
 /// Return an injected I/O error with probability `io_p` at this site.
 pub fn maybe_io(site: &str, key: u64) -> std::io::Result<()> {
     if let Some(spec) = current() {
-        if spec.io_p > 0.0 && draw(&spec, site, key, 2) < spec.io_p {
-            INJECTED.fetch_add(1, Ordering::Relaxed);
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::Other,
-                format!("{FAULT_MARKER}: io error at site {site:?} (key {key:#x})"),
-            ));
+        if spec.io_p > 0.0 {
+            let (v, attempt) = draw(&spec, site, key, 2);
+            let inject = v < spec.io_p;
+            record_decision("io", site, key, attempt, inject);
+            if inject {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    format!("{FAULT_MARKER}: io error at site {site:?} (key {key:#x})"),
+                ));
+            }
         }
     }
     Ok(())
@@ -193,10 +236,15 @@ pub fn maybe_io(site: &str, key: u64) -> std::io::Result<()> {
 /// Sleep 1–5 ms (deterministic duration) with probability `delay_p`.
 pub fn maybe_delay(site: &str, key: u64) {
     if let Some(spec) = current() {
-        if spec.delay_p > 0.0 && draw(&spec, site, key, 3) < spec.delay_p {
-            INJECTED.fetch_add(1, Ordering::Relaxed);
-            let ms = 1 + (site_key(site, key) % 5);
-            std::thread::sleep(std::time::Duration::from_millis(ms));
+        if spec.delay_p > 0.0 {
+            let (v, attempt) = draw(&spec, site, key, 3);
+            let inject = v < spec.delay_p;
+            record_decision("delay", site, key, attempt, inject);
+            if inject {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                let ms = 1 + (site_key(site, key) % 5);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
         }
     }
 }
@@ -237,11 +285,11 @@ mod tests {
             ..FaultSpec::default()
         };
         reset_attempts();
-        let a0 = draw(&spec, "unit-test-site", 11, 1);
-        let a1 = draw(&spec, "unit-test-site", 11, 1);
+        let a0 = draw(&spec, "unit-test-site", 11, 1).0;
+        let a1 = draw(&spec, "unit-test-site", 11, 1).0;
         reset_attempts();
-        let b0 = draw(&spec, "unit-test-site", 11, 1);
-        let b1 = draw(&spec, "unit-test-site", 11, 1);
+        let b0 = draw(&spec, "unit-test-site", 11, 1).0;
+        let b1 = draw(&spec, "unit-test-site", 11, 1).0;
         assert_eq!(a0.to_bits(), b0.to_bits());
         assert_eq!(a1.to_bits(), b1.to_bits());
         assert_ne!(a0.to_bits(), a1.to_bits(), "retries must re-roll");
@@ -256,7 +304,7 @@ mod tests {
         };
         let mut hits = 0;
         for key in 0..2000u64 {
-            if draw(&spec, "rate-site", key, 2) < spec.io_p {
+            if draw(&spec, "rate-site", key, 2).0 < spec.io_p {
                 hits += 1;
             }
         }

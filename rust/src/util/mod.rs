@@ -9,3 +9,4 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod telemetry;

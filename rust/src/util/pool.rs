@@ -4,6 +4,8 @@
 //! across cores; each job is CPU-bound and seconds-long, so a simple
 //! work-stealing-free chunked scheduler with an atomic cursor is plenty.
 
+use crate::util::json::Json;
+use crate::util::telemetry::{self, metrics, trace};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -104,13 +106,21 @@ where
     T: Sync,
     F: Fn(&T) -> R + Sync,
 {
+    metrics::counter("pool.jobs").incr();
     let mut attempt = 0u32;
     loop {
-        match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+        // Span guard lives outside the unwind boundary so its E event
+        // fires even when the job panics.
+        let span = trace::span_args("job", vec![("job".to_string(), Json::from(i as u64))]);
+        let caught = catch_unwind(AssertUnwindSafe(|| f(&items[i])));
+        drop(span);
+        match caught {
             Ok(r) => return Ok(r),
             Err(payload) => {
+                metrics::counter("pool.panics").incr();
                 let message = panic_message(payload);
                 if attempt >= max_retries {
+                    metrics::counter("pool.failures").incr();
                     return Err(JobError {
                         index: i,
                         attempts: attempt + 1,
@@ -118,7 +128,18 @@ where
                     });
                 }
                 attempt += 1;
+                metrics::counter("pool.retries").incr();
                 let backoff = (5u64 << attempt.min(6)).min(200);
+                telemetry::warn(
+                    "retry",
+                    &[
+                        ("site", Json::from("pool")),
+                        ("job", Json::from(i as u64)),
+                        ("attempt", Json::from(attempt as u64)),
+                        ("backoff_ms", Json::from(backoff)),
+                        ("error", Json::from(message)),
+                    ],
+                );
                 std::thread::sleep(Duration::from_millis(backoff));
             }
         }
@@ -156,14 +177,20 @@ where
         (0..n).map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        for w in 0..threads {
+            let cursor = &cursor;
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || {
+                trace::set_thread_label(&format!("worker-{w}"));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = run_caught(items, i, max_retries, f);
+                    *results[i].lock().unwrap() = Some(r);
                 }
-                let r = run_caught(items, i, max_retries, &f);
-                *results[i].lock().unwrap() = Some(r);
             });
         }
     });

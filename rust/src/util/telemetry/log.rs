@@ -1,0 +1,252 @@
+//! Structured, leveled event log.
+//!
+//! Every emission is one event: a severity [`Level`], a short `kind`
+//! tag (`"degraded"`, `"retry"`, `"fault"`, ...), and a list of
+//! key/value fields. Two renderings of the same event exist:
+//!
+//! - **JSONL** (machine form): `{"ts_us":..,"level":"warn","kind":..,
+//!   "fields":{..}}`, one object per line, written when `DAMOV_LOG`
+//!   names a file (appended) or is `-` (stderr).
+//! - **Text** (human form): the pre-telemetry stderr format, e.g.
+//!   `warning: [degraded] component=pjrt fallback=native detail="..."`,
+//!   used when `DAMOV_LOG` is unset.
+//!
+//! Exactly one rendering is active at a time, so nothing prints twice.
+//! `DAMOV_LOG_LEVEL=error|warn|info|debug` filters both (default
+//! `info`; setting the legacy `DAMOV_DEBUG` implies `debug`).
+//! Timestamps share the monotonic clock of [`super::trace`] so log
+//! lines correlate with trace spans.
+
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+/// Event severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+enum Sink {
+    /// Human-readable text to stderr (default).
+    Text,
+    /// JSONL to stderr (`DAMOV_LOG=-`).
+    JsonStderr,
+    /// JSONL appended to a file (`DAMOV_LOG=<path>`).
+    JsonFile(File),
+}
+
+struct State {
+    level: Level,
+    sink: Sink,
+}
+
+fn state() -> &'static Mutex<State> {
+    static S: OnceLock<Mutex<State>> = OnceLock::new();
+    S.get_or_init(|| {
+        let level = std::env::var("DAMOV_LOG_LEVEL")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(if std::env::var("DAMOV_DEBUG").is_ok() {
+                Level::Debug
+            } else {
+                Level::Info
+            });
+        let sink = match std::env::var("DAMOV_LOG") {
+            Ok(p) if p == "-" => Sink::JsonStderr,
+            Ok(p) if !p.is_empty() => {
+                match File::options().create(true).append(true).open(&p) {
+                    Ok(f) => Sink::JsonFile(f),
+                    Err(e) => {
+                        eprintln!("warning: [log] cannot open DAMOV_LOG={p}: {e}");
+                        Sink::Text
+                    }
+                }
+            }
+            _ => Sink::Text,
+        };
+        Mutex::new(State { level, sink })
+    })
+}
+
+fn lock() -> std::sync::MutexGuard<'static, State> {
+    state().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Would an event at `level` be emitted? Use to skip building
+/// expensive debug fields.
+pub fn enabled(level: Level) -> bool {
+    level <= lock().level
+}
+
+/// Override the level filter (tests, embedders).
+pub fn set_level(level: Level) {
+    lock().level = level;
+}
+
+/// Redirect the log: `Some(path)` appends JSONL to the file, `None`
+/// restores human-readable text on stderr. For tests and embedders.
+pub fn set_file(path: Option<&Path>) -> std::io::Result<()> {
+    let sink = match path {
+        Some(p) => Sink::JsonFile(File::options().create(true).append(true).open(p)?),
+        None => Sink::Text,
+    };
+    lock().sink = sink;
+    Ok(())
+}
+
+fn render_field_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => {
+            let plain = !s.is_empty()
+                && s.chars().all(|c| c.is_ascii_graphic() && c != '"' && c != '\\');
+            if plain {
+                s.clone()
+            } else {
+                format!("{s:?}")
+            }
+        }
+        other => other.to_string_compact(),
+    }
+}
+
+fn render_text(level: Level, kind: &str, fields: &[(&str, Json)]) -> String {
+    let prefix = match level {
+        Level::Error => "error:",
+        Level::Warn => "warning:",
+        Level::Info => "[damov]",
+        Level::Debug => "[debug]",
+    };
+    let mut line = format!("{prefix} [{kind}]");
+    for (k, v) in fields {
+        if *k == "msg" {
+            if let Json::Str(s) = v {
+                line.push(' ');
+                line.push_str(s);
+                continue;
+            }
+        }
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(&render_field_value(v));
+    }
+    line
+}
+
+fn render_jsonl(level: Level, kind: &str, fields: &[(&str, Json)]) -> String {
+    let mut f = Json::obj();
+    for (k, v) in fields {
+        f.set(*k, v.clone());
+    }
+    let mut j = Json::obj();
+    j.set("ts_us", super::trace::now_us())
+        .set("level", level.label())
+        .set("kind", kind)
+        .set("fields", f);
+    j.to_string_compact()
+}
+
+/// Emit one structured event. Filtered by the active level; routed to
+/// exactly one sink. Holding the state lock across the write keeps
+/// lines from interleaving under `par_map_catch`.
+pub fn emit(level: Level, kind: &str, fields: &[(&str, Json)]) {
+    let mut st = lock();
+    if level > st.level {
+        return;
+    }
+    match &mut st.sink {
+        Sink::Text => eprintln!("{}", render_text(level, kind, fields)),
+        Sink::JsonStderr => eprintln!("{}", render_jsonl(level, kind, fields)),
+        Sink::JsonFile(f) => {
+            let line = render_jsonl(level, kind, fields);
+            // A full disk must not take down the sweep; drop the line.
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn text_rendering_matches_legacy_format() {
+        let line = render_text(
+            Level::Warn,
+            "degraded",
+            &[
+                ("component", Json::from("pjrt")),
+                ("fallback", Json::from("native")),
+                ("detail", Json::from("load failed: no plugin")),
+            ],
+        );
+        assert_eq!(
+            line,
+            "warning: [degraded] component=pjrt fallback=native \
+             detail=\"load failed: no plugin\""
+        );
+    }
+
+    #[test]
+    fn msg_field_renders_bare() {
+        let line = render_text(
+            Level::Info,
+            "progress",
+            &[("msg", Json::from("profiling 7 functions"))],
+        );
+        assert_eq!(line, "[damov] [progress] profiling 7 functions");
+    }
+
+    #[test]
+    fn jsonl_rendering_is_parseable() {
+        let line = render_jsonl(
+            Level::Error,
+            "job-failed",
+            &[("code", Json::from("STRCpy")), ("attempts", Json::from(3u64))],
+        );
+        let j = Json::parse(&line).expect("valid json");
+        assert_eq!(j.get("level").and_then(Json::as_str), Some("error"));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("job-failed"));
+        let f = j.get("fields").expect("fields");
+        assert_eq!(f.get("code").and_then(Json::as_str), Some("STRCpy"));
+        assert_eq!(f.get("attempts").and_then(Json::as_f64), Some(3.0));
+    }
+}

@@ -1,0 +1,467 @@
+//! Lock-cheap, thread-safe metrics registry.
+//!
+//! Three metric kinds, all backed by atomics so hot paths never block:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (events, retries,
+//!   cache hits, injected faults, ...).
+//! * [`Gauge`] — last-write-wins `f64` (thread count, scale, ...).
+//! * [`Histogram`] — log2-bucketed `u64` value distribution with exact
+//!   count/sum/min/max (span durations in µs, fixed-point iteration
+//!   counts, replay throughput, ...).
+//!
+//! The registry itself is a name → metric map behind a `Mutex`; the lock
+//! is taken only on lookup/registration, never while a value is updated.
+//! Metrics are leaked (`&'static`) so call sites can cache the reference
+//! and update it with a single relaxed atomic op.
+//!
+//! [`snapshot`] serializes the whole registry to JSON (this is what the
+//! sweep checkpoint persists and `damov report telemetry` renders);
+//! [`absorb`] merges a previously persisted snapshot back in, which is
+//! how a `--resume` run reports cumulative rather than per-run counts.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotonically increasing event counter.
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter {
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 value (stored as bits in an atomic).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of log2 buckets: bucket `b` holds values in
+/// `[2^(b-1), 2^b - 1]` (bucket 0 holds exactly 0).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Concurrent log2-bucketed histogram over `u64` values.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Upper bound of a bucket's value range (used as the percentile
+/// estimate — conservative, at most 2x the true value).
+fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX && self.count() == 0 {
+            0
+        } else {
+            m
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile (`q` in [0,1]): upper bound of the bucket
+    /// containing the q-th ranked sample.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(b).min(self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+enum MetricRef {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, MetricRef>> {
+    static R: OnceLock<Mutex<BTreeMap<String, MetricRef>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Registry lock, recovering from poisoning: the map is only mutated by
+/// completed insertions, so it is consistent even after a panic (e.g. a
+/// kind-mismatch panic unwinding through a lookup).
+fn reg_lock() -> std::sync::MutexGuard<'static, BTreeMap<String, MetricRef>> {
+    registry().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Look up (or register) the counter with this name.
+/// Panics if the name is already registered as a different kind.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut r = reg_lock();
+    let entry = r
+        .entry(name.to_string())
+        .or_insert_with(|| MetricRef::Counter(Box::leak(Box::new(Counter::new()))));
+    match entry {
+        MetricRef::Counter(c) => c,
+        _ => panic!("metric {name:?} is not a counter"),
+    }
+}
+
+/// Look up (or register) the gauge with this name.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut r = reg_lock();
+    let entry = r
+        .entry(name.to_string())
+        .or_insert_with(|| MetricRef::Gauge(Box::leak(Box::new(Gauge::new()))));
+    match entry {
+        MetricRef::Gauge(g) => g,
+        _ => panic!("metric {name:?} is not a gauge"),
+    }
+}
+
+/// Look up (or register) the histogram with this name.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut r = reg_lock();
+    let entry = r
+        .entry(name.to_string())
+        .or_insert_with(|| MetricRef::Histogram(Box::leak(Box::new(Histogram::new()))));
+    match entry {
+        MetricRef::Histogram(h) => h,
+        _ => panic!("metric {name:?} is not a histogram"),
+    }
+}
+
+/// Serialize every registered metric:
+/// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+/// Histograms keep their full bucket vector so [`absorb`] is lossless.
+pub fn snapshot() -> Json {
+    let r = reg_lock();
+    let mut counters = Json::obj();
+    let mut gauges = Json::obj();
+    let mut hists = Json::obj();
+    for (name, m) in r.iter() {
+        match m {
+            MetricRef::Counter(c) => {
+                counters.set(name, c.get());
+            }
+            MetricRef::Gauge(g) => {
+                gauges.set(name, g.get());
+            }
+            MetricRef::Histogram(h) => {
+                let mut jh = Json::obj();
+                let buckets: Vec<f64> = h
+                    .buckets
+                    .iter()
+                    .map(|b| b.load(Ordering::Relaxed) as f64)
+                    .collect();
+                jh.set("count", h.count())
+                    .set("sum", h.sum())
+                    .set("min", h.min())
+                    .set("max", h.max())
+                    .set("buckets", buckets);
+                hists.set(name, jh);
+            }
+        }
+    }
+    let mut root = Json::obj();
+    root.set("counters", counters)
+        .set("gauges", gauges)
+        .set("histograms", hists);
+    root
+}
+
+/// Merge a previously persisted [`snapshot`] into the live registry:
+/// counters and histogram contents are added, gauges are overwritten.
+/// Used by `--resume` so a recovered sweep reports cumulative counts.
+pub fn absorb(snap: &Json) {
+    if let Some(Json::Obj(m)) = snap.get("counters") {
+        for (name, v) in m.iter() {
+            if let Some(x) = v.as_f64() {
+                counter(name).add(x as u64);
+            }
+        }
+    }
+    if let Some(Json::Obj(m)) = snap.get("gauges") {
+        for (name, v) in m.iter() {
+            if let Some(x) = v.as_f64() {
+                gauge(name).set(x);
+            }
+        }
+    }
+    if let Some(Json::Obj(m)) = snap.get("histograms") {
+        for (name, jh) in m.iter() {
+            let h = histogram(name);
+            let count = jh.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            if count == 0 {
+                continue;
+            }
+            let sum = jh.get("sum").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let min = jh.get("min").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let max = jh.get("max").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            h.count.fetch_add(count, Ordering::Relaxed);
+            h.sum.fetch_add(sum, Ordering::Relaxed);
+            h.min.fetch_min(min, Ordering::Relaxed);
+            h.max.fetch_max(max, Ordering::Relaxed);
+            if let Some(buckets) = jh.get("buckets").and_then(Json::as_arr) {
+                for (b, v) in buckets.iter().enumerate().take(HIST_BUCKETS) {
+                    if let Some(x) = v.as_f64() {
+                        h.buckets[b].fetch_add(x as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Human-readable rendering of the current registry (the body of
+/// `damov report telemetry`).
+pub fn render_text() -> String {
+    let r = reg_lock();
+    let mut out = String::new();
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut hists = Vec::new();
+    for (name, m) in r.iter() {
+        match m {
+            MetricRef::Counter(c) => counters.push((name.clone(), c.get())),
+            MetricRef::Gauge(g) => gauges.push((name.clone(), g.get())),
+            MetricRef::Histogram(h) => hists.push((name.clone(), *h)),
+        }
+    }
+    if counters.is_empty() && gauges.is_empty() && hists.is_empty() {
+        out.push_str("(no metrics recorded)\n");
+        return out;
+    }
+    if !counters.is_empty() {
+        out.push_str("counters:\n");
+        for (name, v) in &counters {
+            out.push_str(&format!("  {name:<36} {v}\n"));
+        }
+    }
+    if !gauges.is_empty() {
+        out.push_str("gauges:\n");
+        for (name, v) in &gauges {
+            out.push_str(&format!("  {name:<36} {v}\n"));
+        }
+    }
+    if !hists.is_empty() {
+        out.push_str(&format!(
+            "histograms:{:<27} {:>10} {:>14} {:>10} {:>10} {:>10} {:>10}\n",
+            "", "count", "mean", "min", "p50", "p99", "max"
+        ));
+        for (name, h) in &hists {
+            out.push_str(&format!(
+                "  {name:<36} {:>10} {:>14.1} {:>10} {:>10} {:>10} {:>10}\n",
+                h.count(),
+                h.mean(),
+                h.min(),
+                h.percentile(0.50),
+                h.percentile(0.99),
+                h.max()
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = counter("unit.metrics.counter");
+        let before = c.get();
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), before + 5);
+        // Same name returns the same cell.
+        assert_eq!(counter("unit.metrics.counter").get(), before + 5);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let g = gauge("unit.metrics.gauge");
+        g.set(2.5);
+        g.set(7.25);
+        assert_eq!(g.get(), 7.25);
+    }
+
+    #[test]
+    fn histogram_stats_and_percentiles() {
+        let h = histogram("unit.metrics.hist");
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        // Log2 buckets: estimates are upper bounds, within 2x.
+        let p50 = h.percentile(0.5);
+        assert!((50..=127).contains(&p50), "p50={p50}");
+        assert_eq!(h.percentile(1.0), 100);
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_contains_registered_metrics() {
+        counter("unit.metrics.snap_counter").add(3);
+        histogram("unit.metrics.snap_hist").record(10);
+        let snap = snapshot();
+        let c = snap
+            .get("counters")
+            .and_then(|m| m.get("unit.metrics.snap_counter"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(c >= 3.0);
+        let hc = snap
+            .get("histograms")
+            .and_then(|m| m.get("unit.metrics.snap_hist"))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(hc >= 1.0);
+    }
+
+    #[test]
+    fn absorb_adds_counters_and_histograms() {
+        // Hand-built snapshot naming only this test's metrics, so
+        // absorbing it cannot interfere with concurrently running tests.
+        let mut counters = Json::obj();
+        counters.set("unit.metrics.absorb_counter", 5u64);
+        let mut jh = Json::obj();
+        let mut buckets = vec![0.0f64; HIST_BUCKETS];
+        buckets[bucket_of(12)] = 2.0;
+        jh.set("count", 2u64)
+            .set("sum", 24u64)
+            .set("min", 12u64)
+            .set("max", 12u64)
+            .set("buckets", buckets);
+        let mut hists = Json::obj();
+        hists.set("unit.metrics.absorb_hist", jh);
+        let mut snap = Json::obj();
+        snap.set("counters", counters)
+            .set("gauges", Json::obj())
+            .set("histograms", hists);
+
+        let c = counter("unit.metrics.absorb_counter");
+        let h = histogram("unit.metrics.absorb_hist");
+        let c_before = c.get();
+        let h_count_before = h.count();
+        let h_sum_before = h.sum();
+        absorb(&snap);
+        assert_eq!(c.get(), c_before + 5);
+        assert_eq!(h.count(), h_count_before + 2);
+        assert_eq!(h.sum(), h_sum_before + 24);
+        assert_eq!(h.min(), 12);
+    }
+
+    #[test]
+    fn registered_kind_is_sticky() {
+        let _ = counter("unit.metrics.sticky");
+        let r = std::panic::catch_unwind(|| gauge("unit.metrics.sticky"));
+        assert!(r.is_err(), "same name as a different kind must panic");
+    }
+}

@@ -1,0 +1,129 @@
+//! Telemetry for the characterization pipeline: a thread-safe metrics
+//! registry ([`metrics`]), Chrome-trace spans ([`trace`]), and a
+//! structured leveled event log ([`log`]).
+//!
+//! Environment variables (see `docs/telemetry.md`):
+//!
+//! - `DAMOV_TRACE=<path>` — export a Chrome trace-event JSON file.
+//! - `DAMOV_LOG=<path>|-` — structured JSONL event log (file or stderr);
+//!   unset keeps the human-readable text rendering on stderr.
+//! - `DAMOV_LOG_LEVEL=error|warn|info|debug` — event filter (default
+//!   `info`; legacy `DAMOV_DEBUG` implies `debug`).
+//!
+//! Telemetry is observational only: simulated results are byte-identical
+//! whether it is enabled or not.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::Level;
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Initialize all sinks from the environment. Called once at CLI
+/// startup; safe to call again (later calls are no-ops).
+pub fn init_from_env() {
+    trace::init_from_env();
+    let trace_on = trace::is_enabled();
+    let log_path = std::env::var("DAMOV_LOG").ok().filter(|p| !p.is_empty());
+    if trace_on || log_path.is_some() {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(p) = trace::path() {
+            fields.push(("trace", Json::from(p.display().to_string())));
+        }
+        if let Some(p) = &log_path {
+            fields.push(("log", Json::from(p.as_str())));
+        }
+        log::emit(Level::Info, "telemetry", &fields);
+    }
+}
+
+/// Flush buffered trace events to `DAMOV_TRACE` (if configured).
+pub fn flush() {
+    if !trace::is_enabled() {
+        return;
+    }
+    let events = trace::buffered_events();
+    match trace::flush() {
+        Ok(Some(p)) => log::emit(
+            Level::Info,
+            "telemetry",
+            &[
+                ("trace", Json::from(p.display().to_string())),
+                ("events", Json::from(events as u64)),
+            ],
+        ),
+        Ok(None) => {}
+        Err(e) => log::emit(
+            Level::Warn,
+            "telemetry",
+            &[("detail", Json::from(format!("trace flush failed: {e}")))],
+        ),
+    }
+}
+
+/// Emit an error-level event.
+pub fn error(kind: &str, fields: &[(&str, Json)]) {
+    log::emit(Level::Error, kind, fields);
+}
+
+/// Emit a warn-level event.
+pub fn warn(kind: &str, fields: &[(&str, Json)]) {
+    log::emit(Level::Warn, kind, fields);
+}
+
+/// Emit an info-level event.
+pub fn info(kind: &str, fields: &[(&str, Json)]) {
+    log::emit(Level::Info, kind, fields);
+}
+
+/// Emit a debug-level event.
+pub fn debug(kind: &str, fields: &[(&str, Json)]) {
+    log::emit(Level::Debug, kind, fields);
+}
+
+/// A trace span that also records its wall-clock duration into the
+/// `span.<name>.us` histogram, so `damov report telemetry` shows where
+/// time went even when no trace file was requested.
+pub struct TimedSpan {
+    _trace: trace::Span,
+    start: Instant,
+    metric: String,
+}
+
+impl Drop for TimedSpan {
+    fn drop(&mut self) {
+        let us = self.start.elapsed().as_micros() as u64;
+        metrics::histogram(&self.metric).record(us);
+    }
+}
+
+/// Open a timed span with no trace args.
+pub fn span(name: &str) -> TimedSpan {
+    span_args(name, Vec::new())
+}
+
+/// Open a timed span with Chrome-trace args.
+pub fn span_args(name: &str, args: Vec<(String, Json)>) -> TimedSpan {
+    TimedSpan {
+        _trace: trace::span_args(name, args),
+        start: Instant::now(),
+        metric: format!("span.{name}.us"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_span_records_duration_histogram() {
+        {
+            let _s = span("unit-facade");
+        }
+        let h = metrics::histogram("span.unit-facade.us");
+        assert!(h.count() >= 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Span-based tracing with Chrome trace-event JSON export.
+//!
+//! Activated by `DAMOV_TRACE=<path>` (or programmatically via
+//! [`enable`], which tests use to avoid racing on the environment).
+//! When inactive, a span costs one relaxed atomic load.
+//!
+//! Every span emits a `B`/`E` duration-event pair on the lane (`tid`)
+//! of the thread that opened it; worker threads of the sweep pool
+//! register named lanes (`worker-0`, `worker-1`, ...) so the exported
+//! trace shows per-worker timelines. [`flush`] sorts the buffered
+//! events by timestamp and writes `{"traceEvents": [...]}` — loadable
+//! directly in Perfetto (https://ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Timestamps are microseconds on a process-wide monotonic clock
+//! ([`now_us`]); the structured event log shares the same clock so log
+//! lines can be correlated with trace spans.
+
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One buffered trace event.
+struct Ev {
+    /// Phase: 'B' (span begin), 'E' (span end), 'M' (metadata).
+    ph: char,
+    name: String,
+    ts: u64,
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EVENTS: Mutex<Vec<Ev>> = Mutex::new(Vec::new());
+static PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+static NEXT_LANE: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LANE: Cell<u64> = const { Cell::new(0) };
+}
+
+fn epoch() -> Instant {
+    static T: OnceLock<Instant> = OnceLock::new();
+    *T.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide telemetry epoch (first use).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Read `DAMOV_TRACE` once and activate the sink if it names a path.
+pub fn init_from_env() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        let _ = epoch(); // pin the clock epoch to process start
+        if let Ok(p) = std::env::var("DAMOV_TRACE") {
+            if !p.is_empty() {
+                *PATH.lock().unwrap() = Some(PathBuf::from(p));
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// True when spans are being recorded.
+pub fn is_enabled() -> bool {
+    init_from_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatic activation (tests, embedders). `None` buffers events
+/// without a file destination; retrieve them with [`take_events_json`].
+pub fn enable(path: Option<PathBuf>) {
+    init_from_env();
+    *PATH.lock().unwrap() = path;
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording spans (buffered events are kept until taken/flushed).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// The configured export path, if any.
+pub fn path() -> Option<PathBuf> {
+    PATH.lock().unwrap().clone()
+}
+
+/// Number of currently buffered events.
+pub fn buffered_events() -> usize {
+    EVENTS.lock().unwrap().len()
+}
+
+fn push(ev: Ev) {
+    EVENTS.lock().unwrap().push(ev);
+}
+
+/// Lane (Chrome `tid`) of the calling thread, assigned on first use.
+/// Emits a `thread_name` metadata event so the lane is labeled.
+fn lane() -> u64 {
+    LANE.with(|l| {
+        let v = l.get();
+        if v != 0 {
+            return v;
+        }
+        let id = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+        l.set(id);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{id}"));
+        push(Ev {
+            ph: 'M',
+            name,
+            ts: now_us(),
+            tid: id,
+            args: Vec::new(),
+        });
+        id
+    })
+}
+
+/// Label the calling thread's lane (the sweep pool labels its workers
+/// `worker-<k>`). No-op when tracing is inactive.
+pub fn set_thread_label(label: &str) {
+    if !is_enabled() {
+        return;
+    }
+    let tid = lane();
+    push(Ev {
+        ph: 'M',
+        name: label.to_string(),
+        ts: now_us(),
+        tid,
+        args: Vec::new(),
+    });
+}
+
+/// RAII span: records `B` on creation and `E` on drop, on the creating
+/// thread's lane. Inert (zero events) when tracing is inactive at
+/// creation time.
+pub struct Span {
+    tid: u64,
+    live: bool,
+}
+
+/// Open a span with no arguments.
+pub fn span(name: &'static str) -> Span {
+    span_args(name, Vec::new())
+}
+
+/// Open a span with Chrome `args` shown in the trace viewer.
+pub fn span_args(name: &str, args: Vec<(String, Json)>) -> Span {
+    if !is_enabled() {
+        return Span { tid: 0, live: false };
+    }
+    let tid = lane();
+    push(Ev {
+        ph: 'B',
+        name: name.to_string(),
+        ts: now_us(),
+        tid,
+        args,
+    });
+    Span { tid, live: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live {
+            // Unconditional: a span opened while tracing was active must
+            // close its B event even if tracing was disabled meanwhile.
+            push(Ev {
+                ph: 'E',
+                name: String::new(),
+                ts: now_us(),
+                tid: self.tid,
+                args: Vec::new(),
+            });
+        }
+    }
+}
+
+fn ev_to_json(ev: &Ev) -> Json {
+    let mut j = Json::obj();
+    j.set("ph", ev.ph.to_string().as_str())
+        .set("ts", ev.ts)
+        .set("pid", 1u64)
+        .set("tid", ev.tid)
+        .set("cat", "damov");
+    if ev.ph == 'M' {
+        let mut args = Json::obj();
+        args.set("name", ev.name.as_str());
+        j.set("name", "thread_name").set("args", args);
+    } else {
+        if !ev.name.is_empty() {
+            j.set("name", ev.name.as_str());
+        }
+        if !ev.args.is_empty() {
+            let mut args = Json::obj();
+            for (k, v) in &ev.args {
+                args.set(k, v.clone());
+            }
+            j.set("args", args);
+        }
+    }
+    j
+}
+
+/// Drain the buffer into a Chrome trace document
+/// (`{"traceEvents": [...]}`), sorted by timestamp (stable, so each
+/// lane's `B`/`E` nesting order is preserved for equal timestamps).
+pub fn take_events_json() -> Json {
+    let mut events = std::mem::take(&mut *EVENTS.lock().unwrap());
+    events.sort_by_key(|e| e.ts);
+    let arr: Vec<Json> = events.iter().map(ev_to_json).collect();
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(arr))
+        .set("displayTimeUnit", "ms");
+    doc
+}
+
+/// Write buffered events to the configured `DAMOV_TRACE` path (if one
+/// is set) and clear the buffer. Returns the path written, `None` when
+/// no destination is configured (buffer-only mode keeps the events).
+pub fn flush() -> std::io::Result<Option<PathBuf>> {
+    let dest = path();
+    let Some(p) = dest else {
+        return Ok(None);
+    };
+    let doc = take_events_json();
+    std::fs::write(&p, doc.to_string_compact())?;
+    Ok(Some(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // Tracing state is process-global; serialize the tests that toggle it.
+    static GATE: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn inert_when_disabled() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        disable();
+        let before = buffered_events();
+        {
+            let _s = span("unit-disabled");
+        }
+        assert_eq!(buffered_events(), before);
+    }
+
+    #[test]
+    fn spans_emit_matched_pairs() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = take_events_json(); // start from an empty buffer
+        enable(None);
+        {
+            let _outer = span("unit-outer");
+            let _inner = span_args("unit-inner", vec![("k".to_string(), Json::from(7u64))]);
+        }
+        disable();
+        let doc = take_events_json();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let n_b = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("B"))
+            .count();
+        let n_e = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("E"))
+            .count();
+        assert_eq!(n_b, 2);
+        assert_eq!(n_e, 2);
+        // Monotonic timestamps after the stable sort.
+        let mut last = 0.0;
+        for e in evs {
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            assert!(ts >= last, "ts went backwards: {ts} < {last}");
+            last = ts;
+        }
+    }
+}
