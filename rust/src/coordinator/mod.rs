@@ -15,7 +15,11 @@
 //!   recorded failure and a degraded (but usable) result set;
 //! * each completed profile is appended to a flushed, checksummed
 //!   checkpoint; after a crash or Ctrl-C, a `resume` run replays the
-//!   intact prefix and recomputes only unfinished functions.
+//!   intact prefix and recomputes only unfinished functions;
+//! * with `--job-timeout` / `--sweep-deadline`, hung or overdue jobs are
+//!   soft-cancelled by the pool's watchdog and recorded in the
+//!   checkpoint as *retryable* (schema v3), so `--resume` re-runs
+//!   exactly them and `damov report health` shows what timed out.
 
 pub mod reports;
 pub mod store;
@@ -25,17 +29,26 @@ use crate::methodology::step3::{
 };
 use crate::sim::{CoreModel, CORE_SWEEP};
 use crate::util::json::Json;
+use crate::util::pool::{JobErrorKind, PoolOptions};
 use crate::util::telemetry::{self, metrics};
 use crate::workloads::{registry, FunctionSpec, Scale};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Fingerprint identifying a sweep: which functions, which options,
-/// which store schema. Caches and checkpoints are only trusted when
-/// their recorded fingerprint matches the sweep being requested.
+/// which record layout. Caches and checkpoints are only trusted when
+/// their recorded fingerprint matches the sweep being requested. Keyed
+/// by [`store::RECORD_VERSION`] (not the document schema version), so a
+/// document-schema bump that leaves records unchanged — like v2→v3 —
+/// keeps old checkpoints resumable and old caches servable.
 pub fn sweep_fingerprint(specs: &[FunctionSpec], opt: &SweepOptions) -> String {
-    let mut text = format!("schema={};scale={:x};nuca={};", store::SCHEMA_VERSION,
-        opt.scale.0.to_bits(), opt.nuca);
+    let mut text = format!(
+        "schema={};scale={:x};nuca={};",
+        store::RECORD_VERSION,
+        opt.scale.0.to_bits(),
+        opt.nuca
+    );
     for m in opt.core_models {
         text.push_str(match m {
             CoreModel::OutOfOrder => "ooo,",
@@ -64,6 +77,12 @@ pub struct Coordinator {
     pub max_retries: u32,
     /// Resume from an existing checkpoint instead of starting over.
     pub resume: bool,
+    /// Per-job wall-clock budget (`--job-timeout`): overdue jobs are
+    /// soft-cancelled and recorded as retryable. `None` = unbounded.
+    pub job_timeout: Option<Duration>,
+    /// Sweep-wide wall-clock budget (`--sweep-deadline`). `None` =
+    /// unbounded.
+    pub sweep_deadline: Option<Duration>,
 }
 
 impl Coordinator {
@@ -75,6 +94,8 @@ impl Coordinator {
             threads,
             max_retries: 2,
             resume: false,
+            job_timeout: None,
+            sweep_deadline: None,
         }
     }
 
@@ -83,6 +104,26 @@ impl Coordinator {
         self.max_retries = max_retries;
         self.resume = resume;
         self
+    }
+
+    /// Configure wall-clock budgets (`--job-timeout`, `--sweep-deadline`).
+    pub fn with_deadlines(
+        mut self,
+        job_timeout: Option<Duration>,
+        sweep_deadline: Option<Duration>,
+    ) -> Coordinator {
+        self.job_timeout = job_timeout;
+        self.sweep_deadline = sweep_deadline;
+        self
+    }
+
+    fn pool_options(&self) -> PoolOptions {
+        PoolOptions {
+            threads: self.threads,
+            max_retries: self.max_retries,
+            job_timeout: self.job_timeout,
+            sweep_deadline: self.sweep_deadline,
+        }
     }
 
     fn cache_path(&self, tag: &str) -> PathBuf {
@@ -174,7 +215,7 @@ impl Coordinator {
                     None
                 }
             };
-            let results = profile_all_checkpointed(&todo, opt, self.threads, self.max_retries, |p| {
+            let results = profile_all_checkpointed(&todo, opt, &self.pool_options(), |p| {
                 if let Some(w) = &writer {
                     if let Err(e) = w.append(p) {
                         telemetry::warn(
@@ -199,6 +240,31 @@ impl Coordinator {
                     Err(e) => failures.push(e),
                 }
             }
+            // Mark every failure retryable in the checkpoint (schema v3):
+            // a follow-up --resume run recomputes exactly these, and the
+            // health report can say *why* they are missing.
+            if let Some(w) = &writer {
+                for e in &failures {
+                    let rec = store::RetryableRecord {
+                        code: e.code.clone(),
+                        kind: e.kind.label().to_string(),
+                        attempts: e.attempts,
+                        message: e.message.clone(),
+                    };
+                    if let Err(err) = w.append_retryable(&rec) {
+                        telemetry::warn(
+                            "degraded",
+                            &[
+                                ("component", Json::from("checkpoint")),
+                                ("detail", Json::from(format!(
+                                    "could not record retryable failure for {}: {err}",
+                                    e.code
+                                ))),
+                            ],
+                        );
+                    }
+                }
+            }
         }
 
         // Assemble in spec order from recovered + freshly computed.
@@ -221,11 +287,16 @@ impl Coordinator {
             }
         } else {
             metrics::counter("sweep.functions_failed").add(failures.len() as u64);
+            let timed_out = failures.iter().filter(|e| e.kind == JobErrorKind::TimedOut).count();
+            let cancelled = failures.iter().filter(|e| e.kind == JobErrorKind::Cancelled).count();
+            metrics::counter("sweep.functions_timed_out").add(timed_out as u64);
+            metrics::counter("sweep.functions_cancelled").add(cancelled as u64);
             for e in &failures {
                 telemetry::error(
                     "job-failed",
                     &[
                         ("code", Json::from(e.code.as_str())),
+                        ("kind", Json::from(e.kind.label())),
                         ("attempts", Json::from(e.attempts as u64)),
                         ("error", Json::from(e.message.as_str())),
                     ],
@@ -245,16 +316,80 @@ impl Coordinator {
         profiles
     }
 
-    /// The 44 representatives at full scale with both core models and
-    /// the NUCA variant — everything the report suite needs.
-    pub fn representative_profiles(&self, refresh: bool) -> Vec<FunctionProfile> {
-        let specs = registry::representatives();
+    /// The representative sweep's specs (optionally truncated to the
+    /// first `limit`) and options, shared by [`representative_profiles`]
+    /// and the health report so their fingerprints always agree.
+    ///
+    /// [`representative_profiles`]: Coordinator::representative_profiles
+    pub fn representative_sweep(
+        scale: Scale,
+        limit: Option<usize>,
+    ) -> (Vec<FunctionSpec>, SweepOptions) {
+        let mut specs = registry::representatives();
+        if let Some(l) = limit {
+            specs.truncate(l);
+        }
         let opt = SweepOptions {
             core_models: &[CoreModel::OutOfOrder, CoreModel::InOrder],
             nuca: true,
-            scale: Scale::full(),
+            scale,
         };
+        (specs, opt)
+    }
+
+    /// The 44 representatives at full scale with both core models and
+    /// the NUCA variant — everything the report suite needs.
+    pub fn representative_profiles(&self, refresh: bool) -> Vec<FunctionProfile> {
+        self.representative_profiles_scaled(refresh, Scale::full(), None)
+    }
+
+    /// [`representative_profiles`] at an arbitrary scale / subset — CI
+    /// smoke runs use a tiny scale and a `--limit` prefix so a whole
+    /// sweep (plus a deadline-recovery resume) fits in seconds.
+    ///
+    /// [`representative_profiles`]: Coordinator::representative_profiles
+    pub fn representative_profiles_scaled(
+        &self,
+        refresh: bool,
+        scale: Scale,
+        limit: Option<usize>,
+    ) -> Vec<FunctionProfile> {
+        let (specs, opt) = Coordinator::representative_sweep(scale, limit);
         self.profiles("reps", &specs, opt, refresh)
+    }
+
+    /// Outstanding retryable failures of a sweep's checkpoint: functions
+    /// recorded as timed-out / cancelled / panicked that have not since
+    /// completed. Empty when there is no checkpoint (e.g. after a fully
+    /// successful sweep retires it).
+    pub fn retryable(
+        &self,
+        tag: &str,
+        specs: &[FunctionSpec],
+        opt: &SweepOptions,
+    ) -> Vec<store::RetryableRecord> {
+        let fingerprint = sweep_fingerprint(specs, opt);
+        let ckpt = self.checkpoint_path(tag);
+        let completed: std::collections::BTreeSet<String> =
+            store::load_checkpoint(&ckpt, &fingerprint)
+                .into_iter()
+                .map(|p| p.code)
+                .collect();
+        store::load_checkpoint_retryable(&ckpt, &fingerprint)
+            .into_iter()
+            .filter(|r| !completed.contains(&r.code))
+            .collect()
+    }
+
+    /// [`retryable`](Coordinator::retryable) for the representative
+    /// sweep (matching `scale`/`limit` of the profiles call).
+    pub fn representative_retryable(
+        &self,
+        scale: Scale,
+        limit: Option<usize>,
+    ) -> Vec<store::RetryableRecord> {
+        let (specs, opt) = Coordinator::representative_sweep(scale, limit);
+        self.retryable("reps", &specs, &opt)
     }
 
     /// The 100 held-out validation variants (out-of-order host/NDP only —

@@ -702,15 +702,22 @@ pub fn fig24_25(reps: &[FunctionProfile]) -> String {
 
 /// Sweep health: coverage of a profile set against the spec list it was
 /// meant to cover. A fault-free complete sweep reports 100%; after a
-/// degraded run (worker failures, interrupted sweep) this names exactly
-/// which functions are missing so a `--resume` run can finish the job.
+/// degraded run (worker failures, interrupted sweep, watchdog timeouts)
+/// this names exactly which functions are missing — and how many of
+/// those hit the job timeout — so a `--resume` run can finish the job.
 pub fn sweep_health(
     expected: &[crate::workloads::FunctionSpec],
     profiles: &[FunctionProfile],
+    retryable: &[crate::coordinator::store::RetryableRecord],
 ) -> String {
     use std::collections::{BTreeMap, BTreeSet};
     let have: BTreeSet<String> = profiles.iter().map(|p| p.code.clone()).collect();
-    let mut by_class: BTreeMap<&str, (usize, usize, Vec<String>)> = BTreeMap::new();
+    let timed_out: BTreeSet<&str> = retryable
+        .iter()
+        .filter(|r| r.kind == "timed-out" && !have.contains(&r.code))
+        .map(|r| r.code.as_str())
+        .collect();
+    let mut by_class: BTreeMap<&str, (usize, usize, usize, Vec<String>)> = BTreeMap::new();
     for s in expected {
         let class = s.paper_class.unwrap_or(s.family_class);
         let entry = by_class.entry(class).or_default();
@@ -719,18 +726,22 @@ pub fn sweep_health(
         if have.contains(&code) {
             entry.1 += 1;
         } else {
-            entry.2.push(code);
+            if timed_out.contains(code.as_str()) {
+                entry.2 += 1;
+            }
+            entry.3.push(code);
         }
     }
     let mut t = Table::new(
         "Sweep health: profile coverage per class",
-        &["class", "expected", "present", "missing"],
+        &["class", "expected", "present", "timed-out", "missing"],
     );
-    for (class, (exp, present, missing)) in &by_class {
+    for (class, (exp, present, n_timeout, missing)) in &by_class {
         t.row(vec![
             class.to_string(),
             exp.to_string(),
             present.to_string(),
+            n_timeout.to_string(),
             if missing.is_empty() {
                 "-".to_string()
             } else {
@@ -738,7 +749,8 @@ pub fn sweep_health(
             },
         ]);
     }
-    let total_missing: usize = by_class.values().map(|v| v.2.len()).sum();
+    let total_missing: usize = by_class.values().map(|v| v.3.len()).sum();
+    let total_timeouts: usize = by_class.values().map(|v| v.2).sum();
     let mut out = t.render();
     out.push_str(&format!(
         "\n{}/{} functions profiled{}\n",
@@ -750,6 +762,12 @@ pub fn sweep_health(
             format!("; rerun with --resume to finish the remaining {total_missing}")
         }
     ));
+    if total_timeouts > 0 {
+        out.push_str(&format!(
+            "{total_timeouts} of the missing functions hit the job timeout; \
+             raise --job-timeout if they keep timing out on --resume\n"
+        ));
+    }
     out
 }
 
@@ -909,12 +927,41 @@ mod tests {
             .iter()
             .map(|c| registry::by_code(c).unwrap())
             .collect();
-        let s = sweep_health(&specs, &profiles);
+        let s = sweep_health(&specs, &profiles, &[]);
         assert!(s.contains("STRTriad"), "missing function must be named:\n{s}");
         assert!(s.contains("2/3 functions profiled"));
         assert!(s.contains("--resume"));
-        let complete = sweep_health(&specs[..2], &profiles);
+        let complete = sweep_health(&specs[..2], &profiles, &[]);
         assert!(complete.contains("sweep complete"));
+    }
+
+    #[test]
+    fn sweep_health_counts_timed_out_functions() {
+        let profiles = mini_profiles(); // STRCpy + CHAHsti
+        let specs: Vec<_> = ["STRCpy", "CHAHsti", "STRTriad"]
+            .iter()
+            .map(|c| registry::by_code(c).unwrap())
+            .collect();
+        let retryable = vec![
+            crate::coordinator::store::RetryableRecord {
+                code: "STRTriad".to_string(),
+                kind: "timed-out".to_string(),
+                attempts: 1,
+                message: "job timeout".to_string(),
+            },
+            // A stale record for a function that later completed must
+            // not count: the profile supersedes it.
+            crate::coordinator::store::RetryableRecord {
+                code: "STRCpy".to_string(),
+                kind: "timed-out".to_string(),
+                attempts: 1,
+                message: "job timeout".to_string(),
+            },
+        ];
+        let s = sweep_health(&specs, &profiles, &retryable);
+        assert!(s.contains("1 of the missing functions hit the job timeout"), "{s}");
+        assert!(s.contains("--job-timeout"));
+        assert!(s.contains("rerun with --resume"));
     }
 
     #[test]

@@ -36,10 +36,29 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-/// Version of the persisted profile schema. Bump on any change to the
-/// record layout; loaders reject other versions so a sweep never trusts
-/// stale-format data.
-pub const SCHEMA_VERSION: u64 = 2;
+/// Version of the persisted document schema, written into every new
+/// header. Bump on any change to the document structure. v3 added
+/// *retryable* failure lines to checkpoints
+/// ([`CheckpointWriter::append_retryable`]); the profile-record layout
+/// itself is unchanged, so loaders accept v2 and v3 alike (see
+/// [`schema_compatible`]) and `--resume` picks up a v2 checkpoint
+/// seamlessly.
+pub const SCHEMA_VERSION: u64 = 3;
+
+/// Version of the per-profile record layout, part of the sweep
+/// fingerprint (see `coordinator::sweep_fingerprint`). Unchanged since
+/// schema v2 — v3 only added new line kinds — so fingerprints (and with
+/// them caches and checkpoints) remain stable across the v2→v3 bump.
+/// Bump this, not just [`SCHEMA_VERSION`], when the record layout
+/// itself changes.
+pub const RECORD_VERSION: u64 = 2;
+
+/// Document versions this build can read: v2 (profiles + metrics lines)
+/// and v3 (adds retryable lines, which v2-era readers would simply have
+/// treated as a torn tail).
+fn schema_compatible(schema: u64) -> bool {
+    schema == 2 || schema == SCHEMA_VERSION
+}
 
 fn kind_label(k: SystemKind) -> &'static str {
     k.label()
@@ -360,10 +379,11 @@ pub fn save_profiles(path: &Path, profiles: &[FunctionProfile]) -> std::io::Resu
     save_profiles_keyed(path, profiles, "")
 }
 
-/// Decode a schema-v2 document; `None` on any version/record mismatch.
+/// Decode a keyed (schema v2/v3) document; `None` on any
+/// version/record mismatch.
 fn parse_v2(j: &Json) -> Option<(String, Vec<FunctionProfile>)> {
     let schema = j.get("schema")?.as_f64()? as u64;
-    if schema != SCHEMA_VERSION {
+    if !schema_compatible(schema) {
         return None;
     }
     let fp = j.get("fingerprint")?.as_str()?.to_string();
@@ -472,6 +492,96 @@ impl CheckpointWriter {
         f.write_all(b"\n")?;
         f.flush()
     }
+
+    /// Append a retryable-failure line
+    /// (`{"checksum":..,"retryable":{"code":..,"kind":..,..}}`, schema
+    /// v3): the named function did not complete (timed out, cancelled,
+    /// or panicked out of retries) and `--resume` should re-run it.
+    /// Profile loaders skip these lines; [`load_checkpoint_retryable`]
+    /// collects them for the health report.
+    pub fn append_retryable(&self, r: &RetryableRecord) -> std::io::Result<()> {
+        let line = retryable_to_json(r).to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()?;
+        metrics::counter("store.retryable_appends").incr();
+        Ok(())
+    }
+}
+
+/// A function recorded in a checkpoint as failed-but-retryable: it
+/// produced no profile (so `--resume` re-runs it), and the record
+/// preserves *why* for `damov report health`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryableRecord {
+    /// Function code (`FunctionId::code()`).
+    pub code: String,
+    /// Failure kind label: `timed-out`, `cancelled`, or `panicked`
+    /// (see `pool::JobErrorKind::label`).
+    pub kind: String,
+    /// Attempts made before giving up (0 = never started).
+    pub attempts: u32,
+    /// Last error message.
+    pub message: String,
+}
+
+fn retryable_to_json(r: &RetryableRecord) -> Json {
+    let mut body = Json::obj();
+    body.set("code", r.code.as_str())
+        .set("kind", r.kind.as_str())
+        .set("attempts", r.attempts as u64)
+        .set("message", r.message.as_str());
+    let sum = checksum_hex(&body.to_string_compact());
+    let mut j = Json::obj();
+    j.set("checksum", sum).set("retryable", body);
+    j
+}
+
+/// Decode + verify one retryable line; `None` unless it is a retryable
+/// record with an intact checksum.
+fn retryable_from_json(j: &Json) -> Option<RetryableRecord> {
+    let sum = j.get("checksum")?.as_str()?;
+    let body = j.get("retryable")?;
+    if checksum_hex(&body.to_string_compact()) != sum {
+        return None;
+    }
+    Some(RetryableRecord {
+        code: body.get("code")?.as_str()?.to_string(),
+        kind: body.get("kind")?.as_str()?.to_string(),
+        attempts: body.get("attempts").and_then(Json::as_f64).unwrap_or(0.0) as u32,
+        message: body
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+    })
+}
+
+/// The retryable-failure records of a checkpoint with a matching
+/// header, newest record per function code (a function that failed in
+/// several partial sweeps appears once). Codes that later completed
+/// still appear — subtract the loaded profiles to get the outstanding
+/// set. Missing file or foreign header → empty.
+pub fn load_checkpoint_retryable(path: &Path, fingerprint: &str) -> Vec<RetryableRecord> {
+    let Some(body) = checkpoint_body(path, fingerprint) else {
+        return Vec::new();
+    };
+    let mut newest: std::collections::BTreeMap<String, RetryableRecord> =
+        std::collections::BTreeMap::new();
+    for line in body.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { break };
+        if j.get("retryable").is_some() {
+            let Some(r) = retryable_from_json(&j) else {
+                break; // corrupt retryable line: distrust the rest
+            };
+            newest.insert(r.code.clone(), r);
+        }
+    }
+    newest.into_values().collect()
 }
 
 /// Decode + verify one metrics snapshot line; `None` unless the line is
@@ -489,8 +599,11 @@ fn checkpoint_body(path: &Path, fingerprint: &str) -> Option<String> {
     let mut lines = text.lines();
     let first = lines.next()?;
     let hdr = Json::parse(first).ok()?;
-    let schema_ok =
-        hdr.get("schema").and_then(Json::as_f64).map(|s| s as u64) == Some(SCHEMA_VERSION);
+    let schema_ok = hdr
+        .get("schema")
+        .and_then(Json::as_f64)
+        .map(|s| schema_compatible(s as u64))
+        .unwrap_or(false);
     let fp_ok = hdr.get("fingerprint").and_then(Json::as_str) == Some(fingerprint);
     (schema_ok && fp_ok).then(|| lines.collect::<Vec<_>>().join("\n"))
 }
@@ -498,7 +611,9 @@ fn checkpoint_body(path: &Path, fingerprint: &str) -> Option<String> {
 /// Load every intact record of a checkpoint with a matching header
 /// (schema + fingerprint). Missing file or foreign header → empty.
 /// Interleaved metrics snapshot lines (see
-/// [`CheckpointWriter::append_metrics`]) are verified and skipped.
+/// [`CheckpointWriter::append_metrics`]) and retryable-failure lines
+/// (see [`CheckpointWriter::append_retryable`]) are verified and
+/// skipped.
 /// Decoding stops at the first torn or corrupt line: everything before
 /// it is checksum-verified and trusted, everything after is dropped and
 /// will be recomputed.
@@ -517,6 +632,12 @@ pub fn load_checkpoint(path: &Path, fingerprint: &str) -> Vec<FunctionProfile> {
                 continue;
             }
             break; // corrupt metrics line: distrust the rest
+        }
+        if j.get("retryable").is_some() {
+            if retryable_from_json(&j).is_some() {
+                continue; // schema v3: failure marker, not a profile
+            }
+            break; // corrupt retryable line: distrust the rest
         }
         let Some(p) = record_from_json(&j) else { break };
         out.push(p);
@@ -652,5 +773,93 @@ mod tests {
         assert!(load_checkpoint(&path, "fp-2").is_empty());
         assert!(load_checkpoint(Path::new("/nonexistent/ckpt.jsonl"), "fp-1").is_empty());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn retryable_records_roundtrip_and_are_skipped_by_profile_loads() {
+        let p = profile_function(
+            &registry::by_code("STRCpy").unwrap(),
+            SweepOptions {
+                scale: Scale(0.05),
+                ..Default::default()
+            },
+        );
+        let path =
+            std::env::temp_dir().join(format!("damov-retry-{}.jsonl", std::process::id()));
+        let w = CheckpointWriter::create(&path, "fp-r", false).unwrap();
+        let rec = RetryableRecord {
+            code: "STRSca".to_string(),
+            kind: "timed-out".to_string(),
+            attempts: 1,
+            message: "damov-job-cancelled: job-timeout".to_string(),
+        };
+        w.append_retryable(&rec).unwrap();
+        w.append(&p).unwrap();
+        // A later sweep re-fails the same code: newest record wins.
+        let rec2 = RetryableRecord {
+            kind: "cancelled".to_string(),
+            ..rec.clone()
+        };
+        w.append_retryable(&rec2).unwrap();
+        drop(w);
+        // Profile loads skip the retryable lines (no torn-tail break).
+        let profiles = load_checkpoint(&path, "fp-r");
+        assert_eq!(profiles.len(), 1);
+        assert_eq!(profiles[0].code, p.code);
+        // Retryable load dedupes by code, keeping the newest.
+        let retry = load_checkpoint_retryable(&path, "fp-r");
+        assert_eq!(retry.len(), 1);
+        assert_eq!(retry[0], rec2);
+        // Foreign fingerprint → empty.
+        assert!(load_checkpoint_retryable(&path, "fp-x").is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_headers_remain_readable_after_v3_bump() {
+        let p = profile_function(
+            &registry::by_code("STRCpy").unwrap(),
+            SweepOptions {
+                scale: Scale(0.05),
+                ..Default::default()
+            },
+        );
+        // Checkpoint written by a v2-era build: v2 header + profile line.
+        let path = std::env::temp_dir().join(format!("damov-v2-{}.jsonl", std::process::id()));
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&path).unwrap();
+            let mut hdr = Json::obj();
+            hdr.set("schema", 2u64).set("fingerprint", "fp-old");
+            writeln!(f, "{}", hdr.to_string_compact()).unwrap();
+            writeln!(f, "{}", record_to_json(&p).to_string_compact()).unwrap();
+        }
+        let got = load_checkpoint(&path, "fp-old");
+        assert_eq!(got.len(), 1, "v2 checkpoints must stay resumable");
+        assert_eq!(got[0].code, p.code);
+        std::fs::remove_file(&path).ok();
+
+        // Cache document with a v2 schema field.
+        let cache = std::env::temp_dir().join(format!("damov-v2c-{}.json", std::process::id()));
+        {
+            let mut root = Json::obj();
+            root.set("schema", 2u64).set("fingerprint", "fp-old").set(
+                "records",
+                Json::Arr(vec![record_to_json(&p)]),
+            );
+            std::fs::write(&cache, root.to_string_pretty()).unwrap();
+        }
+        assert_eq!(load_profiles_keyed(&cache, "fp-old").unwrap().len(), 1);
+        // Unknown future schema is still rejected.
+        {
+            let mut root = Json::obj();
+            root.set("schema", 99u64).set("fingerprint", "fp-old").set(
+                "records",
+                Json::Arr(vec![record_to_json(&p)]),
+            );
+            std::fs::write(&cache, root.to_string_pretty()).unwrap();
+        }
+        assert!(load_profiles_keyed(&cache, "fp-old").is_none());
+        std::fs::remove_file(&cache).ok();
     }
 }

@@ -12,12 +12,21 @@
 //! --cores N, --system host|host+pf|ndp|host-nuca, --inorder.
 //!
 //! Robustness options (sweep commands):
-//!   --resume          resume an interrupted sweep from its checkpoint
-//!                     (`checkpoint-<tag>.jsonl` in the results dir):
-//!                     only functions without an intact checkpoint
-//!                     record are recomputed
-//!   --max-retries N   retries per panicking worker job before it is
-//!                     recorded as failed (default 2)
+//!   --resume            resume an interrupted sweep from its checkpoint
+//!                       (`checkpoint-<tag>.jsonl` in the results dir):
+//!                       only functions without an intact checkpoint
+//!                       record are recomputed
+//!   --max-retries N     retries per panicking worker job before it is
+//!                       recorded as failed (default 2)
+//!   --job-timeout D     soft-cancel any single function taking longer
+//!                       than D (e.g. `2s`, `500ms`, `1m`); timed-out
+//!                       functions are recorded as retryable in the
+//!                       checkpoint and re-run on `--resume`
+//!   --sweep-deadline D  wall-clock budget for the whole sweep: when it
+//!                       expires, in-flight jobs are cancelled and
+//!                       queued jobs are drained, all retryable
+//!   --limit N           only sweep the first N representatives (CI
+//!                       smoke runs; 0 = no limit, the default)
 //!
 //! Sweeps persist incrementally: each completed function is appended to
 //! a checksummed, crash-safe checkpoint, and the final cache
@@ -26,11 +35,13 @@
 //! rejected and recomputed, never silently served.
 //!
 //! Fault injection (testing the above): set `DAMOV_FAULT_SPEC`, e.g.
-//! `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,seed:42`, to inject
-//! deterministic panics / I/O errors / latency at the sim, store, and
-//! PJRT-load boundaries. See `util::fault`.
+//! `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,hang:0.1,seed:42`, to
+//! inject deterministic panics / I/O errors / latency / hangs at the
+//! sim, store, and PJRT-load boundaries. See `util::fault` and
+//! `docs/robustness.md`.
 
 use damov::coordinator::{default_results_dir, reports, Coordinator};
+use damov::util::cancel;
 use damov::methodology::classify::{self, Features};
 use damov::methodology::locality;
 use damov::methodology::step3::{profile_function, SweepOptions};
@@ -75,7 +86,10 @@ fn usage() {
          common: --threads N --scale X --refresh --results DIR\n\
          robustness: --resume (continue an interrupted sweep from its checkpoint)\n\
          \x20           --max-retries N (retries per panicking worker job, default 2)\n\
-         \x20           DAMOV_FAULT_SPEC=panic:P,io:P,delay:P,seed:S (deterministic fault injection)\n\
+         \x20           --job-timeout D (soft-cancel any job running longer than D, e.g. 2s)\n\
+         \x20           --sweep-deadline D (wall-clock budget for the whole sweep)\n\
+         \x20           --limit N (sweep only the first N representatives; 0 = all)\n\
+         \x20           DAMOV_FAULT_SPEC=panic:P,io:P,delay:P,hang:P,seed:S (deterministic fault injection)\n\
          telemetry: DAMOV_TRACE=trace.json (Chrome/Perfetto trace)\n\
          \x20          DAMOV_LOG=events.jsonl|- (structured JSONL event log)\n\
          \x20          DAMOV_LOG_LEVEL=error|warn|info|debug (default info)\n\
@@ -295,6 +309,17 @@ fn cmd_report(args: &Args) {
     cmd_report_named(args, &names);
 }
 
+/// Parse an optional `--job-timeout`-style duration flag; exits with a
+/// usage error (status 2) naming the flag when the value is malformed.
+fn duration_flag(args: &Args, name: &str) -> Option<std::time::Duration> {
+    args.opt(name).map(|v| {
+        cancel::parse_duration(v).unwrap_or_else(|e| {
+            eprintln!("invalid --{name} {v:?}: {e}");
+            std::process::exit(2);
+        })
+    })
+}
+
 fn cmd_report_named(args: &Args, wanted: &[&str]) {
     let threads = args.opt_usize("threads", default_threads());
     let refresh = args.flag("refresh");
@@ -303,8 +328,16 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         .map(Into::into)
         .unwrap_or_else(default_results_dir);
     let coord = Coordinator::new(&results_dir, threads)
-        .with_recovery(args.opt_u64("max-retries", 2) as u32, args.flag("resume"));
+        .with_recovery(args.opt_u64("max-retries", 2) as u32, args.flag("resume"))
+        .with_deadlines(
+            duration_flag(args, "job-timeout"),
+            duration_flag(args, "sweep-deadline"),
+        );
     let scale = Scale(args.opt_f64("scale", 1.0));
+    let limit = match args.opt_usize("limit", 0) {
+        0 => None,
+        n => Some(n),
+    };
 
     let needs_reps = wanted
         .iter()
@@ -314,13 +347,14 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         .any(|w| matches!(*w, "fig18" | "tab8" | "validation" | "val"));
 
     let reps = if needs_reps {
+        let n = limit.unwrap_or(registry::representatives().len());
         telemetry::info(
             "progress",
             &[("msg", Json::from(format!(
-                "profiling 44 representatives ({threads} threads)..."
+                "profiling {n} representatives ({threads} threads)..."
             )))],
         );
-        coord.representative_profiles(refresh)
+        coord.representative_profiles_scaled(refresh, scale, limit)
     } else {
         Vec::new()
     };
@@ -375,7 +409,14 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
             "fig24" | "fig25" => reports::fig24_25(&reps),
             "tab8" => reports::tab8(&reps, &holdout),
             "validation" | "val" => reports::validation(&reps, &holdout),
-            "health" => reports::sweep_health(&registry::representatives(), &reps),
+            "health" => {
+                let (expected, _) = Coordinator::representative_sweep(scale, limit);
+                reports::sweep_health(
+                    &expected,
+                    &reps,
+                    &coord.representative_retryable(scale, limit),
+                )
+            }
             "telemetry" => reports::telemetry_report(),
             other => {
                 eprintln!("unknown report {other:?}");

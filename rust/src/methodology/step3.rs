@@ -11,7 +11,7 @@ use super::locality::{locality, LocalityMetrics};
 use crate::sim::{simulate, CoreModel, SimResult, SystemConfig, SystemKind, CORE_SWEEP};
 use crate::util::fault;
 use crate::util::json::Json;
-use crate::util::pool::par_map_catch;
+use crate::util::pool::{par_map_catch_opts, JobErrorKind, PoolOptions};
 use crate::util::telemetry::{self, metrics};
 use crate::workloads::{FunctionSpec, Scale};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -136,6 +136,7 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
     let fault_key = fault::key_of(&spec.id.code());
     fault::maybe_delay("sim", fault_key);
     fault::maybe_panic("sim", fault_key);
+    fault::maybe_hang("sim", fault_key);
     let loc = locality(&spec.locality_trace(opt.scale));
     let mut kinds = vec![SystemKind::Host, SystemKind::HostPrefetch, SystemKind::Ndp];
     if opt.nuca {
@@ -204,15 +205,18 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
     }
 }
 
-/// A function whose profiling panicked on every attempt.
+/// A function whose profiling produced no result: it panicked on every
+/// attempt, exceeded its wall-clock budget, or was cancelled.
 #[derive(Debug, Clone)]
 pub struct ProfileError {
     /// Function code (e.g. `STRTriad`) of the failed job.
     pub code: String,
     /// Index of the function in the input spec slice.
     pub index: usize,
-    /// Attempts made (1 + retries).
+    /// Attempts made (1 + retries; 0 = cancelled before starting).
     pub attempts: u32,
+    /// How the job failed (panicked / timed-out / cancelled).
+    pub kind: JobErrorKind,
     /// Stringified panic payload of the last attempt.
     pub message: String,
 }
@@ -221,29 +225,36 @@ impl std::fmt::Display for ProfileError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} (function #{}) failed after {} attempt(s): {}",
-            self.code, self.index, self.attempts, self.message
+            "{} (function #{}) {} after {} attempt(s): {}",
+            self.code,
+            self.index,
+            self.kind.label(),
+            self.attempts,
+            self.message
         )
     }
 }
 
-/// Profile many functions in parallel with panic isolation: one
-/// panicking simulation yields one recorded [`ProfileError`] (after
-/// `max_retries` bounded retries with backoff), not a lost sweep.
+/// Profile many functions in parallel with panic isolation and (when
+/// configured in `pool`) deadline awareness: one panicking simulation
+/// yields one recorded [`ProfileError`] (after `pool.max_retries`
+/// bounded retries with backoff), a hung one is soft-cancelled at
+/// `pool.job_timeout` and recorded as timed-out — never a lost sweep.
 /// `on_complete` runs on the worker thread as soon as each profile
 /// finishes — the coordinator uses it to append to the crash-safe
-/// checkpoint so an interrupted sweep can resume.
+/// checkpoint so an interrupted sweep can resume. A cancelled job
+/// unwinds before `on_complete`, so partial profiles never reach the
+/// checkpoint.
 pub fn profile_all_checkpointed<C>(
     specs: &[FunctionSpec],
     opt: SweepOptions,
-    threads: usize,
-    max_retries: u32,
+    pool: &PoolOptions,
     on_complete: C,
 ) -> Vec<Result<FunctionProfile, ProfileError>>
 where
     C: Fn(&FunctionProfile) + Sync,
 {
-    par_map_catch(specs, threads, max_retries, |s| {
+    par_map_catch_opts(specs, pool, |s| {
         let p = profile_function(s, opt);
         on_complete(&p);
         p
@@ -255,20 +266,21 @@ where
             code: spec.id.code(),
             index: e.index,
             attempts: e.attempts,
+            kind: e.kind,
             message: e.message,
         })
     })
     .collect()
 }
 
-/// [`profile_all_checkpointed`] without a completion hook.
+/// [`profile_all_checkpointed`] without a completion hook or deadlines.
 pub fn profile_all_fallible(
     specs: &[FunctionSpec],
     opt: SweepOptions,
     threads: usize,
     max_retries: u32,
 ) -> Vec<Result<FunctionProfile, ProfileError>> {
-    profile_all_checkpointed(specs, opt, threads, max_retries, |_| {})
+    profile_all_checkpointed(specs, opt, &PoolOptions::new(threads, max_retries), |_| {})
 }
 
 /// Profile many functions in parallel. Panics (naming the function) if

@@ -27,6 +27,7 @@ use super::energy::{energy, EnergyBreakdown, EnergyEvents};
 use super::noc::{HopHistogram, Mesh};
 use super::prefetcher::StreamPrefetcher;
 use super::{Access, Trace};
+use crate::util::cancel;
 use crate::util::json::Json;
 use crate::util::telemetry::{self, metrics};
 
@@ -198,6 +199,12 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
     let ndp_mesh = Mesh::square_for(cfg.dram.vaults);
 
     let quantum = 64usize;
+    // Cooperative cancellation: observe the thread's cancel token every
+    // ~64K replayed accesses so a watchdog soft-cancel (job timeout,
+    // sweep deadline) unwinds a long replay with bounded latency. The
+    // check amortizes to one counter add per quantum.
+    const CANCEL_POLL_EVERY: usize = 64 * 1024;
+    let mut since_poll = 0usize;
     let mut cursors = vec![0usize; n];
     let mut live = n;
     while live > 0 {
@@ -209,6 +216,11 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
                 continue;
             }
             let end = (i + quantum).min(t.len());
+            since_poll += end - i;
+            if since_poll >= CANCEL_POLL_EVERY {
+                since_poll = 0;
+                cancel::poll();
+            }
             while i < end {
                 let a = t[i];
                 i += 1;
@@ -363,6 +375,7 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
 
     let mut fp_iters = 0u64;
     for _ in 0..12 {
+        cancel::poll();
         fp_iters += 1;
         let new_time = stall_cycles(dram_lat, noc_queue).max(bw_floor_cycles);
         rho = (dram_bytes / (new_time / cfg.freq_hz)) / peak_bw;

@@ -1,0 +1,345 @@
+//! Cooperative cancellation and wall-clock budgets for sweep jobs.
+//!
+//! A characterization sweep is only as robust as its slowest job: a
+//! livelocked replay loop or a pathological simulator config can park a
+//! worker lane forever, and the scoped pool then blocks at scope exit.
+//! This module provides the primitives the deadline-aware scheduler in
+//! [`crate::util::pool`] is built on — no external crates, no OS signal
+//! machinery, purely cooperative:
+//!
+//! * [`CancelToken`] — a cloneable atomic flag a watchdog sets and a job
+//!   observes. Cancellation is one-shot and carries a [`CancelReason`].
+//! * [`install`] — binds a token to the current thread for the duration
+//!   of a job, so deeply nested code (the sim engine's replay loop,
+//!   injected hangs) can reach it without threading it through every
+//!   signature.
+//! * [`poll`] — the observation point. Cheap when not cancelled (one
+//!   thread-local read and one relaxed atomic load); on cancellation it
+//!   panics with [`CANCEL_MARKER`] in the payload, unwinding the job
+//!   back to the pool's `catch_unwind`, which maps the marker onto
+//!   `JobErrorKind::TimedOut` / `Cancelled` instead of a plain panic.
+//! * [`Deadline`] — a small wall-clock budget type for sweep-wide
+//!   limits, plus [`parse_duration`] for CLI flags like
+//!   `--job-timeout 2s`.
+//!
+//! Because a cancelled job exits by unwinding *before* its result is
+//! returned, a timed-out profile can never be half-written to a
+//! checkpoint: the pool records a `JobError` and the coordinator appends
+//! a retryable record instead.
+
+use crate::util::telemetry::{metrics, trace};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a job was cancelled. Ordered roughly by scope: one job, the
+/// whole sweep, the whole process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The job exceeded its per-job wall-clock budget (`--job-timeout`).
+    JobTimeout,
+    /// The sweep exceeded its overall budget (`--sweep-deadline`).
+    SweepDeadline,
+    /// The process is shutting down.
+    Shutdown,
+}
+
+impl CancelReason {
+    /// Stable lowercase label used in telemetry events and retryable
+    /// checkpoint records.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CancelReason::JobTimeout => "job-timeout",
+            CancelReason::SweepDeadline => "sweep-deadline",
+            CancelReason::Shutdown => "shutdown",
+        }
+    }
+}
+
+// State encoding of a token: 0 = live, otherwise a CancelReason.
+const LIVE: u8 = 0;
+
+fn encode(reason: CancelReason) -> u8 {
+    match reason {
+        CancelReason::JobTimeout => 1,
+        CancelReason::SweepDeadline => 2,
+        CancelReason::Shutdown => 3,
+    }
+}
+
+fn decode(state: u8) -> Option<CancelReason> {
+    match state {
+        1 => Some(CancelReason::JobTimeout),
+        2 => Some(CancelReason::SweepDeadline),
+        3 => Some(CancelReason::Shutdown),
+        _ => None,
+    }
+}
+
+struct Inner {
+    state: AtomicU8,
+    /// Timestamp of the cancel call ([`trace::now_us`] clock), so the
+    /// latency between cancellation and observation is measurable.
+    cancelled_at_us: AtomicU64,
+}
+
+/// A cloneable, one-shot cancellation flag shared between a watchdog
+/// (which cancels) and a job (which polls). All clones observe the same
+/// state.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl CancelToken {
+    /// A fresh, live token.
+    pub fn new() -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                state: AtomicU8::new(LIVE),
+                cancelled_at_us: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Cancel with `reason`. One-shot: returns `true` only for the call
+    /// that performed the live→cancelled transition; later calls (any
+    /// reason) are no-ops returning `false`, so the first reason wins.
+    pub fn cancel(&self, reason: CancelReason) -> bool {
+        // Stamp first so an observer that sees the state flip always
+        // reads a plausible timestamp.
+        let now = trace::now_us();
+        let won = self
+            .inner
+            .state
+            .compare_exchange(LIVE, encode(reason), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if won {
+            self.inner.cancelled_at_us.store(now, Ordering::Release);
+        }
+        won
+    }
+
+    /// True once [`cancel`](CancelToken::cancel) has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.state.load(Ordering::Acquire) != LIVE
+    }
+
+    /// The winning cancellation reason, if cancelled.
+    pub fn reason(&self) -> Option<CancelReason> {
+        decode(self.inner.state.load(Ordering::Acquire))
+    }
+
+    /// When the token was cancelled, microseconds on the
+    /// [`trace::now_us`] clock (0 if still live).
+    pub fn cancelled_at_us(&self) -> u64 {
+        self.inner.cancelled_at_us.load(Ordering::Acquire)
+    }
+}
+
+/// Marker embedded in the panic payload of a cancellation unwind, so
+/// `catch_unwind` handlers and panic hooks can tell a cooperative
+/// cancel from a real crash.
+pub const CANCEL_MARKER: &str = "damov-job-cancelled";
+
+thread_local! {
+    static CURRENT: RefCell<Option<CancelToken>> = const { RefCell::new(None) };
+}
+
+/// RAII guard from [`install`]: restores the previously installed token
+/// (if any) on drop.
+pub struct TokenGuard {
+    prev: Option<CancelToken>,
+}
+
+impl Drop for TokenGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Install `token` as the calling thread's cancellation context until
+/// the returned guard drops. Nested installs stack.
+pub fn install(token: CancelToken) -> TokenGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(token));
+    TokenGuard { prev }
+}
+
+/// The token installed on this thread, if any.
+pub fn current() -> Option<CancelToken> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// True when the calling thread runs under an installed token (i.e. a
+/// cooperative hang can eventually be cancelled).
+pub fn has_token() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// Non-panicking check: is this thread's job cancelled?
+pub fn cancelled() -> bool {
+    CURRENT.with(|c| c.borrow().as_ref().map(|t| t.is_cancelled()).unwrap_or(false))
+}
+
+/// The cancellation observation point. Call this from long loops
+/// (amortized — e.g. every 64K replayed events). No-op without an
+/// installed token or while the token is live; once cancelled it
+/// records the cancel→observe latency and panics with
+/// [`CANCEL_MARKER`], unwinding the job back to the pool.
+pub fn poll() {
+    // Extract the verdict before panicking so the RefCell borrow is
+    // released prior to the unwind.
+    let hit = CURRENT.with(|c| {
+        c.borrow()
+            .as_ref()
+            .and_then(|t| t.reason().map(|r| (r, t.cancelled_at_us())))
+    });
+    let Some((reason, at)) = hit else {
+        return;
+    };
+    metrics::counter("cancel.observed").incr();
+    if at != 0 {
+        // at == 0 only in the sliver between the state flip and the
+        // timestamp store; skip the sample rather than record garbage.
+        metrics::histogram("cancel.latency_us").record(trace::now_us().saturating_sub(at));
+    }
+    panic!("{CANCEL_MARKER}: {}", reason.label());
+}
+
+/// A wall-clock budget with an absolute expiry instant.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { at: Instant::now() + budget }
+    }
+
+    /// True once the budget is exhausted.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Time left before expiry (zero once expired).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+}
+
+/// Parse a human-friendly duration for CLI flags: a non-negative number
+/// with an optional unit suffix `us` / `ms` / `s` (default) / `m` / `h`,
+/// e.g. `2s`, `1500ms`, `0.5h`, `90`.
+pub fn parse_duration(s: &str) -> Result<Duration, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty duration".to_string());
+    }
+    let split = t
+        .find(|c: char| c.is_ascii_alphabetic())
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad duration {s:?}: {e}"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("duration {s:?} must be finite and non-negative"));
+    }
+    let secs = match unit.trim() {
+        "" | "s" | "sec" | "secs" => v,
+        "us" => v / 1_000_000.0,
+        "ms" => v / 1000.0,
+        "m" | "min" => v * 60.0,
+        "h" => v * 3600.0,
+        other => return Err(format!("unknown duration unit {other:?} in {s:?}")),
+    };
+    Ok(Duration::from_secs_f64(secs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn token_cancel_is_one_shot_and_first_reason_wins() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.reason(), None);
+        assert!(t.cancel(CancelReason::JobTimeout));
+        assert!(!t.cancel(CancelReason::SweepDeadline), "second cancel must lose");
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::JobTimeout));
+        // Clones observe the same state.
+        assert!(t.clone().is_cancelled());
+    }
+
+    #[test]
+    fn poll_is_inert_without_token_and_unwinds_with_marker_when_cancelled() {
+        poll(); // no token installed: must not panic
+        let t = CancelToken::new();
+        {
+            let _g = install(t.clone());
+            assert!(has_token());
+            poll(); // live token: still no panic
+            t.cancel(CancelReason::SweepDeadline);
+            assert!(cancelled());
+            let err = catch_unwind(AssertUnwindSafe(poll)).unwrap_err();
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            assert!(msg.contains(CANCEL_MARKER), "payload: {msg:?}");
+            assert!(msg.contains("sweep-deadline"), "payload: {msg:?}");
+        }
+        assert!(!has_token(), "guard must uninstall the token");
+    }
+
+    #[test]
+    fn install_restores_previous_token() {
+        let outer = CancelToken::new();
+        let inner = CancelToken::new();
+        let _g1 = install(outer.clone());
+        outer.cancel(CancelReason::Shutdown);
+        {
+            let _g2 = install(inner);
+            assert!(!cancelled(), "inner token shadows the outer one");
+        }
+        assert!(cancelled(), "outer token restored after inner guard drops");
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(0));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        let far = Deadline::after(Duration::from_secs(3600));
+        assert!(!far.expired());
+        assert!(far.remaining() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn parse_duration_accepts_units_and_rejects_garbage() {
+        assert_eq!(parse_duration("2s").unwrap(), Duration::from_secs(2));
+        assert_eq!(parse_duration("90").unwrap(), Duration::from_secs(90));
+        assert_eq!(parse_duration("1500ms").unwrap(), Duration::from_millis(1500));
+        assert_eq!(parse_duration("250us").unwrap(), Duration::from_micros(250));
+        assert_eq!(parse_duration("2m").unwrap(), Duration::from_secs(120));
+        assert_eq!(parse_duration(" 1.5h ").unwrap(), Duration::from_secs(5400));
+        assert!(parse_duration("").is_err());
+        assert!(parse_duration("-3s").is_err());
+        assert!(parse_duration("fast").is_err());
+        assert!(parse_duration("10 parsecs").is_err());
+    }
+}

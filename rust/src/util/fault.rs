@@ -9,7 +9,7 @@
 //! Activation, in precedence order:
 //! 1. a programmatic override installed with [`set_override`] (tests);
 //! 2. the `DAMOV_FAULT_SPEC` environment variable, e.g.
-//!    `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,seed:42`.
+//!    `DAMOV_FAULT_SPEC=panic:0.05,io:0.1,delay:0.2,hang:0.1,seed:42`.
 //!
 //! Determinism: every injection decision is a pure hash of
 //! `(seed, site, key, attempt)` — independent of thread scheduling. The
@@ -20,13 +20,15 @@
 //! produces results identical to a clean sweep.
 //!
 //! Injection sites used across the crate:
-//! * `"sim"` — entry of `methodology::step3::profile_function` (panics
-//!   and latency; exercises `pool::par_map_catch` isolation + retry);
+//! * `"sim"` — entry of `methodology::step3::profile_function` (panics,
+//!   latency, and hangs; exercises `pool::par_map_catch` isolation +
+//!   retry and the deadline watchdog);
 //! * `"store"` — results-store writes (I/O errors; exercises atomic
 //!   save and checkpoint degradation);
 //! * `"pjrt-load"` — artifact loading (I/O errors; exercises the
 //!   native-analytics fallback).
 
+use crate::util::cancel;
 use crate::util::json::Json;
 use crate::util::rng::mix64;
 use crate::util::telemetry::{self, metrics, Level};
@@ -43,14 +45,17 @@ pub struct FaultSpec {
     pub io_p: f64,
     /// Probability that an instrumented site sleeps 1–5 ms.
     pub delay_p: f64,
+    /// Probability that an instrumented site hangs (sleep-loops) until
+    /// its job is cancelled — exercises the deadline/watchdog machinery.
+    pub hang_p: f64,
     /// Seed of the deterministic decision hash.
     pub seed: u64,
 }
 
 impl FaultSpec {
     /// Parse the `DAMOV_FAULT_SPEC` syntax: comma-separated
-    /// `kind:value` entries with kinds `panic`, `io`, `delay` (f64
-    /// probabilities in [0,1]) and `seed` (u64).
+    /// `kind:value` entries with kinds `panic`, `io`, `delay`, `hang`
+    /// (f64 probabilities in [0,1]) and `seed` (u64).
     pub fn parse(s: &str) -> Result<FaultSpec, String> {
         let mut spec = FaultSpec::default();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -64,7 +69,7 @@ impl FaultSpec {
                         .parse::<u64>()
                         .map_err(|e| format!("bad seed {val:?}: {e}"))?;
                 }
-                kind @ ("panic" | "io" | "delay") => {
+                kind @ ("panic" | "io" | "delay" | "hang") => {
                     let p = val
                         .trim()
                         .parse::<f64>()
@@ -75,7 +80,8 @@ impl FaultSpec {
                     match kind {
                         "panic" => spec.panic_p = p,
                         "io" => spec.io_p = p,
-                        _ => spec.delay_p = p,
+                        "delay" => spec.delay_p = p,
+                        _ => spec.hang_p = p,
                     }
                 }
                 other => return Err(format!("unknown fault kind {other:?}")),
@@ -86,7 +92,7 @@ impl FaultSpec {
 
     /// True if any fault kind can fire.
     pub fn is_active(&self) -> bool {
-        self.panic_p > 0.0 || self.io_p > 0.0 || self.delay_p > 0.0
+        self.panic_p > 0.0 || self.io_p > 0.0 || self.delay_p > 0.0 || self.hang_p > 0.0
     }
 }
 
@@ -233,6 +239,45 @@ pub fn maybe_io(site: &str, key: u64) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Hang with probability `hang_p` at this site: sleep-loop in ~1 ms
+/// steps, checking the job's cancel token each step, until a watchdog
+/// cancels the job — whereupon [`cancel::poll`] unwinds with the cancel
+/// marker. Models a livelocked replay or stalled I/O call for the
+/// deadline machinery (kind salt 4). Without an installed token (no
+/// `--job-timeout`/`--sweep-deadline` active) a true hang would wedge
+/// the process, so the injection degrades to a bounded 25 ms stall plus
+/// a structured warning.
+pub fn maybe_hang(site: &str, key: u64) {
+    if let Some(spec) = current() {
+        if spec.hang_p > 0.0 {
+            let (v, attempt) = draw(&spec, site, key, 4);
+            let inject = v < spec.hang_p;
+            record_decision("hang", site, key, attempt, inject);
+            if inject {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                if !cancel::has_token() {
+                    telemetry::warn(
+                        "fault",
+                        &[(
+                            "detail",
+                            Json::from(format!(
+                                "hang injected at site {site:?} (key {key:#x}) without a \
+                                 cancellation context; stalling 25 ms instead of hanging"
+                            )),
+                        )],
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                    return;
+                }
+                loop {
+                    cancel::poll();
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
 /// Sleep 1–5 ms (deterministic duration) with probability `delay_p`.
 pub fn maybe_delay(site: &str, key: u64) {
     if let Some(spec) = current() {
@@ -261,6 +306,15 @@ mod tests {
         assert!((s.delay_p - 0.2).abs() < 1e-12);
         assert_eq!(s.seed, 42);
         assert!(s.is_active());
+    }
+
+    #[test]
+    fn parse_hang_kind() {
+        let s = FaultSpec::parse("hang:0.2,seed:7").unwrap();
+        assert!((s.hang_p - 0.2).abs() < 1e-12);
+        assert_eq!(s.seed, 7);
+        assert!(s.is_active());
+        assert!(FaultSpec::parse("hang:2").is_err());
     }
 
     #[test]

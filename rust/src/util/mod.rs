@@ -1,6 +1,7 @@
 //! Infrastructure substrates built in-repo (the offline environment ships
 //! only the `xla` crate closure — no serde/clap/rayon/criterion/proptest).
 
+pub mod cancel;
 pub mod cli;
 pub mod fault;
 pub mod json;

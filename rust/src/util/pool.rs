@@ -3,20 +3,45 @@
 //! The experiment coordinator fans hundreds of independent simulations out
 //! across cores; each job is CPU-bound and seconds-long, so a simple
 //! work-stealing-free chunked scheduler with an atomic cursor is plenty.
+//!
+//! [`par_map_catch_opts`] adds deadline awareness on top of the panic
+//! isolation of [`par_map_catch`]: a per-job wall-clock budget
+//! (`--job-timeout`), a sweep-wide budget (`--sweep-deadline`), and a
+//! watchdog thread that scans per-worker job start stamps and
+//! soft-cancels overdue jobs through their [`cancel::CancelToken`]. A
+//! cancelled job exits by unwinding at its next [`cancel::poll`] point,
+//! so its (partial) result is discarded, never half-written; the slot is
+//! recorded as a [`JobError`] with [`JobErrorKind::TimedOut`] or
+//! [`JobErrorKind::Cancelled`].
 
+use crate::util::cancel::{self, CancelReason, CancelToken, Deadline};
 use crate::util::json::Json;
 use crate::util::telemetry::{self, metrics, trace};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Number of worker threads to use: the `DAMOV_THREADS` env var if set,
-/// otherwise available parallelism (min 1).
+/// otherwise available parallelism (min 1). An unparseable value is
+/// reported (a misconfigured sweep should be visible, not silent) and
+/// treated as unset.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("DAMOV_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+        match v.trim().parse::<usize>() {
+            Ok(n) => return n.max(1),
+            Err(e) => {
+                telemetry::warn(
+                    "config",
+                    &[(
+                        "detail",
+                        Json::from(format!(
+                            "ignoring unparseable DAMOV_THREADS={v:?} ({e}); \
+                             falling back to available parallelism"
+                        )),
+                    )],
+                );
+            }
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -66,13 +91,42 @@ where
         .collect()
 }
 
-/// A job that panicked on every attempt.
+/// How a job ultimately failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobErrorKind {
+    /// The job body panicked on every attempt.
+    Panicked,
+    /// The job exceeded `--job-timeout` and was soft-cancelled by the
+    /// watchdog. Never retried in-sweep; recorded as retryable so
+    /// `--resume` re-runs it.
+    TimedOut,
+    /// The job was cancelled by a sweep-wide deadline or shutdown
+    /// (possibly before it ever started).
+    Cancelled,
+}
+
+impl JobErrorKind {
+    /// Stable lowercase label used in telemetry and checkpoint records.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobErrorKind::Panicked => "panicked",
+            JobErrorKind::TimedOut => "timed-out",
+            JobErrorKind::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// A job that did not produce a value: panicked on every attempt, timed
+/// out, or was cancelled.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JobError {
     /// Index of the failed item in the input slice.
     pub index: usize,
-    /// Number of attempts made (1 + retries).
+    /// Number of attempts made (1 + retries; 0 for jobs cancelled
+    /// before they started).
     pub attempts: u32,
+    /// What happened on the last attempt.
+    pub kind: JobErrorKind,
     /// Panic payload of the last attempt, stringified.
     pub message: String,
 }
@@ -81,8 +135,11 @@ impl std::fmt::Display for JobError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "job {} failed after {} attempt(s): {}",
-            self.index, self.attempts, self.message
+            "job {} {} after {} attempt(s): {}",
+            self.index,
+            self.kind.label(),
+            self.attempts,
+            self.message
         )
     }
 }
@@ -97,11 +154,26 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Backoff before retry `attempt` (1-based): exponential starting at
+/// 5 ms, capped at 200 ms — 5, 10, 20, 40, 80, 160, 200, 200, ...
+fn retry_backoff_ms(attempt: u32) -> u64 {
+    (5u64 << attempt.saturating_sub(1).min(6)).min(200)
+}
+
 /// Run one job with panic isolation and bounded retry. Backoff is
-/// exponential starting at 5 ms, capped at 200 ms — transient faults
-/// (I/O pressure, injected panics) clear quickly; deterministic bugs
-/// fail fast with their identity attached.
-fn run_caught<T, R, F>(items: &[T], i: usize, max_retries: u32, f: &F) -> Result<R, JobError>
+/// exponential starting at 5 ms (see [`retry_backoff_ms`]), capped at
+/// 200 ms — transient faults (I/O pressure, injected panics) clear
+/// quickly; deterministic bugs fail fast with their identity attached.
+/// A cancellation unwind (payload carrying [`cancel::CANCEL_MARKER`])
+/// is not a failure of the job body: it maps to `TimedOut`/`Cancelled`
+/// per the token's reason and is never retried.
+fn run_caught<T, R, F>(
+    items: &[T],
+    i: usize,
+    max_retries: u32,
+    token: Option<&CancelToken>,
+    f: &F,
+) -> Result<R, JobError>
 where
     T: Sync,
     F: Fn(&T) -> R + Sync,
@@ -117,19 +189,46 @@ where
         match caught {
             Ok(r) => return Ok(r),
             Err(payload) => {
-                metrics::counter("pool.panics").incr();
                 let message = panic_message(payload);
-                if attempt >= max_retries {
+                if message.contains(cancel::CANCEL_MARKER) {
+                    let reason = token
+                        .and_then(|t| t.reason())
+                        .unwrap_or(CancelReason::Shutdown);
+                    let kind = match reason {
+                        CancelReason::JobTimeout => JobErrorKind::TimedOut,
+                        _ => JobErrorKind::Cancelled,
+                    };
+                    telemetry::warn(
+                        "job-cancelled",
+                        &[
+                            ("site", Json::from("pool")),
+                            ("job", Json::from(i as u64)),
+                            ("attempt", Json::from((attempt + 1) as u64)),
+                            ("reason", Json::from(reason.label())),
+                        ],
+                    );
+                    return Err(JobError {
+                        index: i,
+                        attempts: attempt + 1,
+                        kind,
+                        message,
+                    });
+                }
+                metrics::counter("pool.panics").incr();
+                // A cancelled job must not burn wall-clock on retries.
+                let cancelled = token.map(|t| t.is_cancelled()).unwrap_or(false);
+                if attempt >= max_retries || cancelled {
                     metrics::counter("pool.failures").incr();
                     return Err(JobError {
                         index: i,
                         attempts: attempt + 1,
+                        kind: JobErrorKind::Panicked,
                         message,
                     });
                 }
                 attempt += 1;
                 metrics::counter("pool.retries").incr();
-                let backoff = (5u64 << attempt.min(6)).min(200);
+                let backoff = retry_backoff_ms(attempt);
                 telemetry::warn(
                     "retry",
                     &[
@@ -143,6 +242,38 @@ where
                 std::thread::sleep(Duration::from_millis(backoff));
             }
         }
+    }
+}
+
+/// Scheduling knobs for [`par_map_catch_opts`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolOptions {
+    /// Worker threads (clamped to `1..=items.len()`).
+    pub threads: usize,
+    /// Retries per panicking job before it is recorded as failed.
+    pub max_retries: u32,
+    /// Per-job wall-clock budget: an overdue job is soft-cancelled by
+    /// the watchdog and recorded as `TimedOut`. `None` = unbounded.
+    pub job_timeout: Option<Duration>,
+    /// Sweep-wide budget measured from pool entry: on expiry all
+    /// in-flight jobs are cancelled and queued jobs are recorded as
+    /// `Cancelled` without starting. `None` = unbounded.
+    pub sweep_deadline: Option<Duration>,
+}
+
+impl PoolOptions {
+    /// Options with no deadlines (the classic [`par_map_catch`] shape).
+    pub fn new(threads: usize, max_retries: u32) -> PoolOptions {
+        PoolOptions {
+            threads,
+            max_retries,
+            job_timeout: None,
+            sweep_deadline: None,
+        }
+    }
+
+    fn bounded(&self) -> bool {
+        self.job_timeout.is_some() || self.sweep_deadline.is_some()
     }
 }
 
@@ -163,23 +294,241 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_catch_opts(items, &PoolOptions::new(threads, max_retries), f)
+}
+
+/// Sentinel job index marking a worker slot as idle.
+const IDLE: usize = usize::MAX;
+
+/// Per-worker published state the watchdog scans: which job is
+/// in-flight, when it started, and the token to cancel it with.
+struct WorkerSlot {
+    /// In-flight job index, or [`IDLE`].
+    job: AtomicUsize,
+    /// Job start stamp, microseconds on the [`trace::now_us`] clock.
+    start_us: AtomicU64,
+    token: Mutex<Option<CancelToken>>,
+    /// Job index + 1 whose grace overrun was already reported, so the
+    /// watchdog complains about each stuck job exactly once.
+    grace_reported: AtomicUsize,
+}
+
+impl WorkerSlot {
+    fn new() -> WorkerSlot {
+        WorkerSlot {
+            job: AtomicUsize::new(IDLE),
+            start_us: AtomicU64::new(0),
+            token: Mutex::new(None),
+            grace_reported: AtomicUsize::new(0),
+        }
+    }
+
+    /// Publish job `i` as in-flight on this slot.
+    fn arm(&self, i: usize, token: CancelToken) {
+        *self.token.lock().unwrap() = Some(token);
+        self.start_us.store(trace::now_us(), Ordering::Relaxed);
+        // Release-publish last: a watchdog that sees the index also
+        // sees the stamp and token.
+        self.job.store(i, Ordering::Release);
+    }
+
+    fn disarm(&self) {
+        self.job.store(IDLE, Ordering::Release);
+        *self.token.lock().unwrap() = None;
+    }
+}
+
+/// How long after a soft-cancel the watchdog waits before reporting a
+/// job as stuck (i.e. not reaching a [`cancel::poll`] point).
+const CANCEL_GRACE: Duration = Duration::from_secs(1);
+
+/// Watchdog loop: every few milliseconds scan the worker slots, cancel
+/// overdue jobs, maintain the in-flight job-age gauge, and trip the
+/// sweep-wide stop flag when the deadline expires. Exits when all
+/// workers have finished.
+fn watchdog(
+    slots: &[WorkerSlot],
+    stop: &AtomicBool,
+    live_workers: &AtomicUsize,
+    job_timeout: Option<Duration>,
+    deadline: Option<Deadline>,
+) {
+    // Tick fast enough that cancellation latency is dominated by the
+    // jobs' own poll interval, not by the watchdog.
+    let tick = Duration::from_millis(5);
+    let grace_us = CANCEL_GRACE.as_micros() as u64;
+    while live_workers.load(Ordering::Acquire) != 0 {
+        let now = trace::now_us();
+        let deadline_hit = deadline.map(|d| d.expired()).unwrap_or(false);
+        if deadline_hit && !stop.swap(true, Ordering::AcqRel) {
+            metrics::counter("pool.deadline_hits").incr();
+            telemetry::warn(
+                "sweep-deadline",
+                &[(
+                    "detail",
+                    Json::from(
+                        "sweep deadline reached; cancelling in-flight jobs \
+                         and skipping queued ones",
+                    ),
+                )],
+            );
+            trace::instant("sweep-deadline", Vec::new());
+        }
+        let mut max_age_us = 0u64;
+        for slot in slots {
+            let job = slot.job.load(Ordering::Acquire);
+            if job == IDLE {
+                continue;
+            }
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let age_us = now.saturating_sub(start_us);
+            max_age_us = max_age_us.max(age_us);
+            let overdue = job_timeout
+                .map(|t| age_us as u128 > t.as_micros())
+                .unwrap_or(false);
+            if !overdue && !deadline_hit {
+                continue;
+            }
+            let token = slot.token.lock().unwrap().clone();
+            let Some(token) = token else { continue };
+            // The slot may have been disarmed and re-armed with a fresh
+            // job between the scan and the clone; only cancel if it still
+            // holds the job the age was computed for (a stale cancel on a
+            // completed job's token would otherwise hit its successor).
+            if slot.job.load(Ordering::Acquire) != job
+                || slot.start_us.load(Ordering::Relaxed) != start_us
+            {
+                continue;
+            }
+            let reason = if overdue {
+                CancelReason::JobTimeout
+            } else {
+                CancelReason::SweepDeadline
+            };
+            if token.cancel(reason) {
+                match reason {
+                    CancelReason::JobTimeout => metrics::counter("pool.timeouts").incr(),
+                    _ => metrics::counter("pool.cancels").incr(),
+                }
+                telemetry::warn(
+                    "timeout",
+                    &[
+                        ("site", Json::from("pool")),
+                        ("job", Json::from(job as u64)),
+                        ("age_ms", Json::from(age_us / 1000)),
+                        ("reason", Json::from(reason.label())),
+                    ],
+                );
+                trace::instant(
+                    "cancel",
+                    vec![
+                        ("job".to_string(), Json::from(job as u64)),
+                        ("reason".to_string(), Json::from(reason.label())),
+                    ],
+                );
+            } else {
+                // Already cancelled on an earlier tick; if the job still
+                // hasn't unwound past the grace period, report it once —
+                // it is wedged somewhere without a poll point and its
+                // lane stays lost until it reaches one.
+                let cancelled_at = token.cancelled_at_us();
+                if cancelled_at != 0
+                    && now.saturating_sub(cancelled_at) > grace_us
+                    && slot.grace_reported.swap(job + 1, Ordering::Relaxed) != job + 1
+                {
+                    metrics::counter("pool.cancel_stuck").incr();
+                    telemetry::error(
+                        "cancel-stuck",
+                        &[
+                            ("job", Json::from(job as u64)),
+                            ("age_ms", Json::from(age_us / 1000)),
+                            (
+                                "detail",
+                                Json::from(
+                                    "job ignored cancellation past the grace \
+                                     period; it has no reachable poll point",
+                                ),
+                            ),
+                        ],
+                    );
+                }
+            }
+        }
+        metrics::gauge("pool.inflight_age_us").set(max_age_us as f64);
+        std::thread::sleep(tick);
+    }
+    metrics::gauge("pool.inflight_age_us").set(0.0);
+}
+
+/// Install (once per process) a panic-hook filter that silences the
+/// intentional unwinds used by cooperative cancellation; every other
+/// panic goes to the previous hook unchanged.
+fn install_cancel_panic_hook() {
+    use std::sync::OnceLock;
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains(cancel::CANCEL_MARKER) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Deadline-aware sibling of [`par_map_catch`]. With no deadlines in
+/// `opts` the behavior (and fast path) is identical; with a job timeout
+/// and/or sweep deadline configured, a watchdog thread soft-cancels
+/// overdue work via per-job [`CancelToken`]s. Every input slot is still
+/// filled: values for completed jobs, `JobError`s (with the failure
+/// kind) for everything else, in input order.
+pub fn par_map_catch_opts<T, R, F>(
+    items: &[T],
+    opts: &PoolOptions,
+    f: F,
+) -> Vec<Result<R, JobError>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(n);
-    if threads == 1 {
-        return (0..n).map(|i| run_caught(items, i, max_retries, &f)).collect();
+    let threads = opts.threads.max(1).min(n);
+    let max_retries = opts.max_retries;
+    let bounded = opts.bounded();
+    if threads == 1 && !bounded {
+        return (0..n)
+            .map(|i| run_caught(items, i, max_retries, None, &f))
+            .collect();
+    }
+    if bounded {
+        install_cancel_panic_hook();
     }
 
+    let deadline = opts.sweep_deadline.map(Deadline::after);
     let cursor = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<Result<R, JobError>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<WorkerSlot> = (0..threads).map(|_| WorkerSlot::new()).collect();
+    let stop = AtomicBool::new(false);
+    let live_workers = AtomicUsize::new(threads);
 
     std::thread::scope(|scope| {
         for w in 0..threads {
             let cursor = &cursor;
             let results = &results;
+            let slots = &slots;
+            let stop = &stop;
+            let live_workers = &live_workers;
             let f = &f;
             scope.spawn(move || {
                 trace::set_thread_label(&format!("worker-{w}"));
@@ -188,9 +537,43 @@ where
                     if i >= n {
                         break;
                     }
-                    let r = run_caught(items, i, max_retries, f);
+                    if stop.load(Ordering::Acquire) {
+                        // Sweep budget exhausted: drain the queue,
+                        // recording each unstarted job as cancelled.
+                        metrics::counter("pool.cancels").incr();
+                        *results[i].lock().unwrap() = Some(Err(JobError {
+                            index: i,
+                            attempts: 0,
+                            kind: JobErrorKind::Cancelled,
+                            message: "sweep deadline exceeded before the job started"
+                                .to_string(),
+                        }));
+                        continue;
+                    }
+                    let r = if bounded {
+                        let token = CancelToken::new();
+                        slots[w].arm(i, token.clone());
+                        let guard = cancel::install(token.clone());
+                        let r = run_caught(items, i, max_retries, Some(&token), f);
+                        drop(guard);
+                        slots[w].disarm();
+                        r
+                    } else {
+                        run_caught(items, i, max_retries, None, f)
+                    };
                     *results[i].lock().unwrap() = Some(r);
                 }
+                live_workers.fetch_sub(1, Ordering::Release);
+            });
+        }
+        if bounded {
+            let slots = &slots;
+            let stop = &stop;
+            let live_workers = &live_workers;
+            let job_timeout = opts.job_timeout;
+            scope.spawn(move || {
+                trace::set_thread_label("watchdog");
+                watchdog(slots, stop, live_workers, job_timeout, deadline);
             });
         }
     });
@@ -199,8 +582,9 @@ where
         .into_iter()
         .enumerate()
         .map(|(i, m)| {
-            // Every slot is filled: run_caught traps panics, so workers
-            // always store a Result before moving on.
+            // Every slot is filled: run_caught traps panics (including
+            // cancellation unwinds), and stopped workers record their
+            // claimed indices as cancelled before moving on.
             m.into_inner()
                 .unwrap_or_else(|p| p.into_inner())
                 .unwrap_or_else(|| {
@@ -261,6 +645,13 @@ mod tests {
     }
 
     #[test]
+    fn retry_backoff_schedule_starts_at_5ms() {
+        // Pinned: first retry sleeps 5 ms, then doubles to the 200 ms cap.
+        let sched: Vec<u64> = (1..=9).map(retry_backoff_ms).collect();
+        assert_eq!(sched, vec![5, 10, 20, 40, 80, 160, 200, 200, 200]);
+    }
+
+    #[test]
     fn catch_reports_failed_job_identity() {
         let items: Vec<u32> = (0..20).collect();
         let out = par_map_catch(&items, 4, 1, |&x| {
@@ -275,6 +666,7 @@ mod tests {
                 let e = r.as_ref().unwrap_err();
                 assert_eq!(e.index, 7);
                 assert_eq!(e.attempts, 2);
+                assert_eq!(e.kind, JobErrorKind::Panicked);
                 assert!(e.message.contains("cursed"), "message={}", e.message);
             } else {
                 assert_eq!(*r.as_ref().unwrap(), i as u32 * 2);
@@ -318,6 +710,14 @@ mod tests {
         });
         assert!(out[2].is_err());
         assert_eq!(out.iter().filter(|r| r.is_ok()).count(), 3);
+    }
+
+    #[test]
+    fn opts_without_deadlines_matches_classic_behavior() {
+        let items: Vec<u64> = (0..50).collect();
+        let out = par_map_catch_opts(&items, &PoolOptions::new(4, 0), |&x| x + 1);
+        let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (1..=50).collect::<Vec<_>>());
     }
 
     #[test]

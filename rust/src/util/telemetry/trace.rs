@@ -24,7 +24,8 @@ use std::time::Instant;
 
 /// One buffered trace event.
 struct Ev {
-    /// Phase: 'B' (span begin), 'E' (span end), 'M' (metadata).
+    /// Phase: 'B' (span begin), 'E' (span end), 'M' (metadata),
+    /// 'i' (instant).
     ph: char,
     name: String,
     ts: u64,
@@ -139,6 +140,23 @@ pub fn set_thread_label(label: &str) {
     });
 }
 
+/// Record a point-in-time marker (Chrome instant event, thread scope)
+/// on the calling thread's lane — e.g. a watchdog cancellation. No-op
+/// when tracing is inactive.
+pub fn instant(name: &str, args: Vec<(String, Json)>) {
+    if !is_enabled() {
+        return;
+    }
+    let tid = lane();
+    push(Ev {
+        ph: 'i',
+        name: name.to_string(),
+        ts: now_us(),
+        tid,
+        args,
+    });
+}
+
 /// RAII span: records `B` on creation and `E` on drop, on the creating
 /// thread's lane. Inert (zero events) when tracing is inactive at
 /// creation time.
@@ -199,6 +217,11 @@ fn ev_to_json(ev: &Ev) -> Json {
         if !ev.name.is_empty() {
             j.set("name", ev.name.as_str());
         }
+        if ev.ph == 'i' {
+            // Chrome instant events need an explicit scope; "t" pins the
+            // marker to its thread lane.
+            j.set("s", "t");
+        }
         if !ev.args.is_empty() {
             let mut args = Json::obj();
             for (k, v) in &ev.args {
@@ -253,6 +276,25 @@ mod tests {
             let _s = span("unit-disabled");
         }
         assert_eq!(buffered_events(), before);
+    }
+
+    #[test]
+    fn instants_record_name_and_thread_scope() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = take_events_json(); // start from an empty buffer
+        enable(None);
+        instant("unit-instant", vec![("job".to_string(), Json::from(3u64))]);
+        disable();
+        let doc = take_events_json();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let inst: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .collect();
+        assert_eq!(inst.len(), 1);
+        assert_eq!(inst[0].get("name").and_then(Json::as_str), Some("unit-instant"));
+        assert_eq!(inst[0].get("s").and_then(Json::as_str), Some("t"));
+        assert!(inst[0].get("args").is_some());
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Deadline-aware sweep proofs (ISSUE acceptance criteria): the
+//! hung-job watchdog fires deterministically, a sweep-wide deadline
+//! drains the pool with every job accounted for, and a sweep that lost
+//! functions to `--job-timeout` converges byte-identically to a clean
+//! run after a fault-free `--resume`.
+//!
+//! The pool-level tests (`watchdog_*`, `sweep_deadline_*`,
+//! `timeout_stress_*`) hang cooperatively — a `cancel::poll()` sleep
+//! loop, exactly what `fault::maybe_hang` does — so they exercise the
+//! real cancellation path without any fault spec. Only the end-to-end
+//! test installs a (process-global) fault override; no other test in
+//! this binary touches fault sites, so they may run concurrently.
+
+use damov::coordinator::{store, sweep_fingerprint, Coordinator};
+use damov::methodology::step3::{profile_call_count, FunctionProfile, SweepOptions};
+use damov::util::cancel;
+use damov::util::fault::{self, FaultSpec};
+use damov::util::pool::{par_map_catch_opts, JobErrorKind, PoolOptions};
+use damov::util::rng::mix64;
+use damov::workloads::{registry, Scale};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Hang until the watchdog cancels this job: the same cooperative loop
+/// `fault::maybe_hang` runs, inlined so pool tests need no fault spec.
+fn hang_until_cancelled() {
+    loop {
+        cancel::poll();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn watchdog_cancels_hung_jobs_deterministically() {
+    let items: Vec<usize> = (0..16).collect();
+    let opts = PoolOptions {
+        threads: 4,
+        max_retries: 2,
+        job_timeout: Some(Duration::from_millis(100)),
+        sweep_deadline: None,
+    };
+    let results = par_map_catch_opts(&items, &opts, |&i| {
+        if i % 8 == 3 {
+            hang_until_cancelled();
+        }
+        i * 2
+    });
+    assert_eq!(results.len(), 16);
+    for (i, r) in results.iter().enumerate() {
+        if i % 8 == 3 {
+            let e = r.as_ref().expect_err("hung job must not produce a value");
+            assert_eq!(e.kind, JobErrorKind::TimedOut, "job {i}: {e}");
+            assert_eq!(e.index, i, "error carries the job identity");
+            assert_eq!(e.attempts, 1, "timed-out jobs are never retried in-sweep");
+            assert!(e.to_string().contains("timed-out"), "{e}");
+        } else {
+            assert_eq!(*r.as_ref().unwrap(), i * 2, "job {i} completes normally");
+        }
+    }
+}
+
+#[test]
+fn sweep_deadline_stops_the_pool_with_every_job_accounted_for() {
+    // 64 jobs of >= 10 ms on 2 workers is >= 320 ms of serial work, so a
+    // 150 ms sweep deadline is guaranteed to expire mid-sweep; and the
+    // first jobs finish well inside it, so both outcomes are observed.
+    let items: Vec<usize> = (0..64).collect();
+    let opts = PoolOptions {
+        threads: 2,
+        max_retries: 0,
+        job_timeout: None,
+        sweep_deadline: Some(Duration::from_millis(150)),
+    };
+    let results = par_map_catch_opts(&items, &opts, |&i| {
+        for _ in 0..10 {
+            cancel::poll();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        i
+    });
+    assert_eq!(results.len(), 64, "every input slot is filled");
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(v) => {
+                assert_eq!(*v, i);
+                done += 1;
+            }
+            Err(e) => {
+                assert_eq!(e.kind, JobErrorKind::Cancelled, "job {i}: {e}");
+                assert_eq!(e.index, i);
+                cancelled += 1;
+            }
+        }
+    }
+    assert!(done > 0, "jobs started before the deadline complete");
+    assert!(cancelled > 0, "the deadline must cancel the rest");
+    assert_eq!(done + cancelled, 64);
+}
+
+/// Satellite: concurrency stress — many workers, mixed hanging and fast
+/// jobs. Input order is preserved, every non-timed-out job runs exactly
+/// once, and timeouts land precisely on the hanging indices.
+#[test]
+fn timeout_stress_many_threads_mixed_jobs() {
+    const N: usize = 300;
+    let items: Vec<usize> = (0..N).collect();
+    let opts = PoolOptions {
+        threads: 16,
+        max_retries: 3,
+        job_timeout: Some(Duration::from_millis(80)),
+        sweep_deadline: None,
+    };
+    let completed = AtomicUsize::new(0);
+    let results = par_map_catch_opts(&items, &opts, |&x| {
+        if x % 7 == 5 {
+            hang_until_cancelled();
+        }
+        completed.fetch_add(1, Ordering::Relaxed);
+        x * 2
+    });
+    assert_eq!(results.len(), N);
+    let mut ok = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        if i % 7 == 5 {
+            let e = r.as_ref().expect_err("hung job must time out");
+            assert_eq!(e.kind, JobErrorKind::TimedOut, "job {i}: {e}");
+            assert_eq!(e.index, i);
+        } else {
+            assert_eq!(*r.as_ref().unwrap(), i * 2, "order preserved at {i}");
+            ok += 1;
+        }
+    }
+    assert_eq!(
+        completed.load(Ordering::Relaxed),
+        ok,
+        "every non-timed-out job runs exactly once (no duplicates, no losses)"
+    );
+}
+
+/// Replicates `fault::maybe_hang`'s first-attempt decision draw (seed,
+/// site `"sim"`, key = code, kind salt 4, attempt 0) from the crate's
+/// public hash primitives, so the test can *choose* a seed with a known
+/// hang pattern instead of hard-coding one and hoping.
+fn hang_draw(seed: u64, code: &str) -> f64 {
+    let sk = mix64(fault::key_of("sim") ^ mix64(fault::key_of(code))) ^ mix64(4);
+    let h = mix64(seed ^ sk ^ mix64(0x9E37_79B9_7F4A_7C15));
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Smallest seed for which exactly one of `codes` hangs at probability
+/// `p` on its first attempt.
+fn seed_hanging_exactly_one(codes: &[String], p: f64) -> u64 {
+    (0u64..100_000)
+        .find(|&s| codes.iter().filter(|c| hang_draw(s, c.as_str()) < p).count() == 1)
+        .expect("some seed under 100k must hang exactly one function")
+}
+
+fn serialize(ps: &[FunctionProfile]) -> String {
+    ps.iter()
+        .map(|p| store::profile_to_json(p).to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// End-to-end: a sweep with an injected hang and `--job-timeout` loses
+/// exactly the hung function — recorded as retryable in the checkpoint,
+/// never half-written — and a fault-free `--resume` recomputes only it,
+/// converging byte-identically to a clean sweep.
+#[test]
+fn hang_injected_sweep_times_out_and_resume_converges() {
+    let dir = std::env::temp_dir().join(format!("damov-dl-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let specs: Vec<_> = registry::representatives().into_iter().take(4).collect();
+    let codes: Vec<String> = specs.iter().map(|s| s.id.code()).collect();
+    let opt = SweepOptions {
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+
+    // --- 1. Clean baseline. -------------------------------------------
+    let clean = Coordinator::new(&dir, 4).profiles("dl-clean", &specs, opt, true);
+    assert_eq!(clean.len(), 4);
+
+    // --- 2. Sweep under an injected hang + --job-timeout. -------------
+    let hang_p = 0.1;
+    let seed = seed_hanging_exactly_one(&codes, hang_p);
+    let hung: Vec<String> = codes
+        .iter()
+        .filter(|c| hang_draw(seed, c.as_str()) < hang_p)
+        .cloned()
+        .collect();
+    assert_eq!(hung.len(), 1);
+    let hung = &hung[0];
+    fault::reset_attempts();
+    fault::set_override(Some(FaultSpec {
+        hang_p,
+        seed,
+        ..Default::default()
+    }));
+    let partial = Coordinator::new(&dir, 4)
+        .with_recovery(2, false)
+        .with_deadlines(Some(Duration::from_secs(2)), None)
+        .profiles("dl", &specs, opt, true);
+    fault::set_override(None);
+
+    assert_eq!(
+        partial.len(),
+        3,
+        "exactly the hung function (seed {seed}) must be missing"
+    );
+    assert!(
+        !partial.iter().any(|p| &p.code == hung),
+        "the hung function must not reach the result set"
+    );
+
+    // --- 3. The checkpoint: 3 intact profiles, 1 retryable, no torn
+    //        record for the hung function. ------------------------------
+    let fp = sweep_fingerprint(&specs, &opt);
+    let ck = dir.join("checkpoint-dl.jsonl");
+    assert!(ck.exists(), "partial sweep keeps its checkpoint for --resume");
+    let ck_profiles = store::load_checkpoint(&ck, &fp);
+    assert_eq!(ck_profiles.len(), 3, "no partial profile is ever checkpointed");
+    assert!(!ck_profiles.iter().any(|p| &p.code == hung));
+    let retryable = store::load_checkpoint_retryable(&ck, &fp);
+    assert_eq!(retryable.len(), 1, "the timed-out function is recorded retryable");
+    assert_eq!(&retryable[0].code, hung);
+    assert_eq!(retryable[0].kind, "timed-out");
+    assert_eq!(retryable[0].attempts, 1, "timeouts are not retried in-sweep");
+
+    // --- 4. Fault-free --resume recomputes only the hung function and
+    //        converges byte-identically. --------------------------------
+    let calls_before = profile_call_count();
+    let resumed = Coordinator::new(&dir, 4)
+        .with_recovery(0, true)
+        .profiles("dl", &specs, opt, false);
+    assert_eq!(
+        profile_call_count() - calls_before,
+        1,
+        "--resume must recompute exactly the timed-out function"
+    );
+    assert_eq!(resumed.len(), 4);
+    assert_eq!(
+        serialize(&clean),
+        serialize(&resumed),
+        "timeout-recovering resume must equal the clean sweep byte-for-byte"
+    );
+    assert!(!ck.exists(), "completed sweep retires its checkpoint");
+    assert!(store::load_profiles_keyed(&dir.join("profiles-dl.json"), &fp).is_some());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

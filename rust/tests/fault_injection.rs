@@ -84,6 +84,7 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
         io_p: 0.1,
         delay_p: 0.2,
         seed: 1234,
+        ..Default::default()
     }));
     let faulty = Coordinator::new(&dir, 4)
         .with_recovery(8, false)

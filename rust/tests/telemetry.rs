@@ -71,6 +71,16 @@ fn validate_chrome_trace(doc: &Json) -> (usize, usize) {
                     "metadata events label lanes"
                 );
             }
+            "i" => {
+                // Instant events (cancellations, deadline hits) carry a
+                // name and thread scope but no duration to nest.
+                assert!(e.get("name").is_some(), "i event without a name");
+                assert_eq!(
+                    e.get("s").and_then(Json::as_str),
+                    Some("t"),
+                    "instant events use thread scope"
+                );
+            }
             other => panic!("unexpected phase {other:?}"),
         }
     }
