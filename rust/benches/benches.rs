@@ -8,9 +8,11 @@
 //!   of each family end-to-end (the `damov report` machinery).
 
 use damov::methodology::locality;
-use damov::methodology::step3::{profile_function, SweepOptions};
+use damov::methodology::step3::{
+    profile_function, profile_function_tuned, ReplayParallelism, SweepOptions,
+};
 use damov::runtime::{artifact, Analytics};
-use damov::sim::{simulate, CoreModel, SystemConfig};
+use damov::sim::{simulate, simulate_events, CoreModel, SoaTrace, SystemConfig};
 use damov::workloads::{registry, Scale};
 use std::time::Instant;
 
@@ -76,6 +78,22 @@ fn main() {
         }),
     });
 
+    // Same workload as replay/stream_host_4c, but replayed from a
+    // pre-built SoA buffer — isolates the column-layout win plus the
+    // saved per-call transposition (the memoized sweep path).
+    let sspec = registry::by_code("STRTriad").unwrap();
+    let soa = SoaTrace::from_trace(&sspec.trace(4, Scale::full()));
+    let sn = soa.total_accesses() as f64;
+    let scfg = SystemConfig::host(4, CoreModel::OutOfOrder);
+    benches.push(Bench {
+        name: "replay/stream_host_4c_soa_shared",
+        run: Box::new(move || {
+            let r = simulate_events(&scfg, &soa);
+            std::hint::black_box(r.time_s);
+            Some(sn)
+        }),
+    });
+
     let tspec = registry::by_code("LIGPrkEmd").unwrap();
     benches.push(Bench {
         name: "tracegen/graph_64c",
@@ -131,6 +149,26 @@ fn main() {
                     scale: Scale(0.5),
                     ..Default::default()
                 },
+            );
+            std::hint::black_box(p.mpki);
+            None
+        }),
+    });
+
+    // The same sweep with serial config-point replay: the gap between
+    // this and the entry above is the parallel fast path's win (`damov
+    // bench` measures it over the whole suite; docs/performance.md).
+    let fspec2 = registry::by_code("CHAHsti").unwrap();
+    benches.push(Bench {
+        name: "harness/profile_one_function_serial_replay",
+        run: Box::new(move || {
+            let p = profile_function_tuned(
+                &fspec2,
+                SweepOptions {
+                    scale: Scale(0.5),
+                    ..Default::default()
+                },
+                ReplayParallelism::Serial,
             );
             std::hint::black_box(p.mpki);
             None

@@ -7,6 +7,8 @@
 //!   damov characterize --code C         run the 3-step methodology on one function
 //!   damov report <id>|all [...]         regenerate paper tables/figures
 //!   damov validate                      §3.5 two-phase validation
+//!   damov bench [...]                   time the sweep phases serial vs
+//!                                       parallel, emit BENCH_sweep.json
 //!
 //! Common options: --threads N, --scale X, --refresh, --results DIR,
 //! --cores N, --system host|host+pf|ndp|host-nuca, --inorder.
@@ -44,13 +46,16 @@ use damov::coordinator::{default_results_dir, reports, Coordinator};
 use damov::util::cancel;
 use damov::methodology::classify::{self, Features};
 use damov::methodology::locality;
-use damov::methodology::step3::{profile_function, SweepOptions};
+use damov::methodology::step3::{
+    profile_all_fallible, profile_function, profile_function_tuned, ReplayParallelism,
+    SweepOptions,
+};
 use damov::runtime::{artifact, Analytics};
 use damov::sim::{simulate, CoreModel, SystemConfig, SystemKind};
 use damov::util::cli::Args;
 use damov::util::json::Json;
-use damov::util::pool::default_threads;
-use damov::util::telemetry;
+use damov::util::pool::{self, default_threads};
+use damov::util::telemetry::{self, metrics};
 use damov::workloads::{registry, Scale};
 
 fn main() {
@@ -67,6 +72,7 @@ fn main() {
         Some("step1") => cmd_step1(&args),
         Some("report") => cmd_report(&args),
         Some("validate") => cmd_report_named(&args, &["validation"]),
+        Some("bench") => cmd_bench(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -82,8 +88,10 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: damov <list|config|sim|step1|characterize|report|validate> [options]\n\
+        "usage: damov <list|config|sim|step1|characterize|report|validate|bench> [options]\n\
          common: --threads N --scale X --refresh --results DIR\n\
+         bench: damov bench [--scale tiny|full|X] [--limit N] [--out BENCH_sweep.json]\n\
+         \x20      [--check rust/tests/golden/bench-baseline.json] (docs/performance.md)\n\
          robustness: --resume (continue an interrupted sweep from its checkpoint)\n\
          \x20           --max-retries N (retries per panicking worker job, default 2)\n\
          \x20           --job-timeout D (soft-cancel any job running longer than D, e.g. 2s)\n\
@@ -132,7 +140,7 @@ fn cmd_sim(args: &Args) {
         std::process::exit(2);
     });
     let cores = args.opt_usize("cores", 4);
-    let scale = Scale(args.opt_f64("scale", 1.0));
+    let scale = scale_flag(args, 1.0);
     let model = if args.flag("inorder") {
         CoreModel::InOrder
     } else {
@@ -179,7 +187,7 @@ fn cmd_sim(args: &Args) {
 /// §3.1 Step-1 scan: rank every suite function by its top-down
 /// Memory Bound %, the way the paper filters its 345-application corpus.
 fn cmd_step1(args: &Args) {
-    let scale = Scale(args.opt_f64("scale", 0.25));
+    let scale = scale_flag(args, 0.25);
     let threads = args.opt_usize("threads", default_threads());
     let specs = registry::all_functions();
     telemetry::info(
@@ -208,7 +216,7 @@ fn cmd_characterize(args: &Args) {
         eprintln!("unknown function {code:?}");
         std::process::exit(2);
     });
-    let scale = Scale(args.opt_f64("scale", 1.0));
+    let scale = scale_flag(args, 1.0);
     println!("Step 1: memory-bound identification");
     let s1 = damov::methodology::step1::identify(&spec, scale);
     println!(
@@ -309,6 +317,23 @@ fn cmd_report(args: &Args) {
     cmd_report_named(args, &names);
 }
 
+/// Parse `--scale`: a number, or the named presets `tiny` (0.05) and
+/// `full` (1.0). Exits with a usage error (status 2) on anything else.
+fn scale_flag(args: &Args, default: f64) -> Scale {
+    match args.opt("scale") {
+        None => Scale(default),
+        Some("tiny") => Scale::tiny(),
+        Some("full") => Scale::full(),
+        Some(v) => match v.parse::<f64>() {
+            Ok(x) => Scale(x),
+            Err(_) => {
+                eprintln!("invalid --scale {v:?} (expected a number, `tiny`, or `full`)");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
 /// Parse an optional `--job-timeout`-style duration flag; exits with a
 /// usage error (status 2) naming the flag when the value is malformed.
 fn duration_flag(args: &Args, name: &str) -> Option<std::time::Duration> {
@@ -333,7 +358,7 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
             duration_flag(args, "job-timeout"),
             duration_flag(args, "sweep-deadline"),
         );
-    let scale = Scale(args.opt_f64("scale", 1.0));
+    let scale = scale_flag(args, 1.0);
     let limit = match args.opt_usize("limit", 0) {
         0 => None,
         n => Some(n),
@@ -430,6 +455,209 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
                 "store",
                 &[("detail", Json::from(format!("could not write {path:?}: {e}")))],
             );
+        }
+    }
+}
+
+/// Per-phase CPU time (µs) accumulated in the telemetry registry's span
+/// histograms. The registry is always on, so a bench pass is just a
+/// before/after delta — no special instrumentation mode.
+#[derive(Clone, Copy)]
+struct PhaseCpu {
+    trace_gen: u64,
+    analysis: u64,
+    replay: u64,
+    timing: u64,
+}
+
+impl PhaseCpu {
+    fn now() -> PhaseCpu {
+        PhaseCpu {
+            trace_gen: metrics::histogram("span.trace-gen.us").sum(),
+            analysis: metrics::histogram("span.trace-analysis.us").sum(),
+            replay: metrics::histogram("span.replay.us").sum(),
+            timing: metrics::histogram("span.timing.us").sum(),
+        }
+    }
+
+    fn since(self, before: PhaseCpu) -> PhaseCpu {
+        PhaseCpu {
+            trace_gen: self.trace_gen - before.trace_gen,
+            analysis: self.analysis - before.analysis,
+            replay: self.replay - before.replay,
+            timing: self.timing - before.timing,
+        }
+    }
+
+    fn total(self) -> u64 {
+        self.trace_gen + self.analysis + self.replay + self.timing
+    }
+}
+
+/// One timed sweep pass (serial reference or parallel fast path).
+struct BenchPass {
+    wall_s: f64,
+    accesses: u64,
+    cpu: PhaseCpu,
+}
+
+impl BenchPass {
+    fn run(work: impl FnOnce()) -> BenchPass {
+        let cpu0 = PhaseCpu::now();
+        let acc0 = metrics::counter("sim.accesses").get();
+        let t0 = std::time::Instant::now();
+        work();
+        BenchPass {
+            wall_s: t0.elapsed().as_secs_f64(),
+            accesses: metrics::counter("sim.accesses").get() - acc0,
+            cpu: PhaseCpu::now().since(cpu0),
+        }
+    }
+
+    /// Wall time attributed to the replay phase: total wall scaled by
+    /// the replay share of phase CPU. Under parallel replay the CPU
+    /// share is unchanged but the wall shrinks, so this is the quantity
+    /// the ≥2x speedup target and the CI regression gate are defined on
+    /// (docs/performance.md).
+    fn replay_wall_s(&self) -> f64 {
+        let total = self.cpu.total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.wall_s * self.cpu.replay as f64 / total as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        phases
+            .set("trace_gen_us", self.cpu.trace_gen)
+            .set("trace_analysis_us", self.cpu.analysis)
+            .set("replay_us", self.cpu.replay)
+            .set("timing_us", self.cpu.timing);
+        let mut j = Json::obj();
+        j.set("wall_s", self.wall_s)
+            .set("accesses", self.accesses)
+            .set("replay_wall_s", self.replay_wall_s())
+            .set(
+                "replay_macc_per_s",
+                self.accesses as f64 / self.replay_wall_s().max(1e-9) / 1e6,
+            )
+            .set("phase_cpu", phases);
+        j
+    }
+}
+
+/// `damov bench`: time trace-gen / trace-analysis / replay / timing over
+/// the representative sweep, serial reference vs the parallel SoA fast
+/// path, and emit `BENCH_sweep.json`. With `--check BASELINE`, enforce
+/// the committed performance floor (exit 3 on regression); thresholds
+/// and attribution are documented in docs/performance.md.
+fn cmd_bench(args: &Args) {
+    let scale = scale_flag(args, Scale::tiny().0);
+    let threads = args.opt_usize("threads", default_threads());
+    let mut specs = registry::representatives();
+    let limit = args.opt_usize("limit", 0);
+    if limit > 0 {
+        specs.truncate(limit);
+    }
+    let opt = SweepOptions {
+        scale,
+        ..Default::default()
+    };
+    eprintln!(
+        "bench: {} functions at scale {}, {} threads (budget {})",
+        specs.len(),
+        scale.0,
+        threads,
+        pool::budget_total()
+    );
+
+    // Serial reference: the historical nested loop, one function at a
+    // time on this thread, one config point at a time.
+    let serial = BenchPass::run(|| {
+        for s in &specs {
+            std::hint::black_box(profile_function_tuned(s, opt, ReplayParallelism::Serial));
+        }
+    });
+    // Fast path: the production scheduler — functions fan out over the
+    // worker pool, each trace's config points fan out over whatever the
+    // global thread budget has left.
+    let parallel = BenchPass::run(|| {
+        for r in profile_all_fallible(&specs, opt, threads, 0) {
+            std::hint::black_box(r.unwrap_or_else(|e| panic!("bench sweep failed: {e}")));
+        }
+    });
+
+    let total_speedup = serial.wall_s / parallel.wall_s.max(1e-9);
+    let replay_speedup = serial.replay_wall_s() / parallel.replay_wall_s().max(1e-9);
+    eprintln!(
+        "bench: serial {:.3}s (replay {:.3}s) | parallel {:.3}s (replay {:.3}s) | speedup total {:.2}x replay {:.2}x",
+        serial.wall_s,
+        serial.replay_wall_s(),
+        parallel.wall_s,
+        parallel.replay_wall_s(),
+        total_speedup,
+        replay_speedup
+    );
+
+    let mut speedup = Json::obj();
+    speedup
+        .set("total_wall", total_speedup)
+        .set("replay_wall", replay_speedup);
+    let mut out = Json::obj();
+    out.set("schema", 1u64)
+        .set("scale", scale.0)
+        .set("threads", threads)
+        .set("budget_threads", pool::budget_total())
+        .set("functions", specs.len())
+        .set("serial", serial.to_json())
+        .set("parallel", parallel.to_json())
+        .set("speedup", speedup);
+    let out_path = args.opt_or("out", "BENCH_sweep.json");
+    if let Err(e) = std::fs::write(out_path, out.to_string_pretty()) {
+        eprintln!("could not write {out_path:?}: {e}");
+        std::process::exit(1);
+    }
+    eprintln!("bench: wrote {out_path}");
+
+    if let Some(baseline_path) = args.opt("check") {
+        let base = std::fs::read_to_string(baseline_path)
+            .map_err(|e| e.to_string())
+            .and_then(|text| Json::parse(&text))
+            .unwrap_or_else(|e| {
+                eprintln!("could not load baseline {baseline_path:?}: {e}");
+                std::process::exit(2);
+            });
+        let mut failures = Vec::new();
+        // The relative-speedup floor only means something with real
+        // parallelism available; small CI runners skip it.
+        if let Some(min) = base.get("min_replay_speedup").and_then(Json::as_f64) {
+            if threads >= 4 && pool::budget_total() >= 4 && replay_speedup < min {
+                failures.push(format!("replay speedup {replay_speedup:.2}x < floor {min:.2}x"));
+            }
+        }
+        // Absolute replay wall gate, enforced only once a machine-local
+        // baseline has been recorded (the committed value is null).
+        if let Some(base_wall) = base.get("replay_wall_s").and_then(Json::as_f64) {
+            let max_regression = base
+                .get("max_regression")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.25);
+            let limit = base_wall * max_regression;
+            if parallel.replay_wall_s() > limit {
+                failures.push(format!(
+                    "parallel replay wall {:.3}s exceeds baseline {base_wall:.3}s x {max_regression} = {limit:.3}s",
+                    parallel.replay_wall_s()
+                ));
+            }
+        }
+        if failures.is_empty() {
+            eprintln!("bench: baseline check passed ({baseline_path})");
+        } else {
+            for f in &failures {
+                eprintln!("bench: REGRESSION: {f}");
+            }
+            std::process::exit(3);
         }
     }
 }

@@ -8,20 +8,33 @@
 //! AMAT, request breakdowns, bandwidth, NoC statistics).
 
 use super::locality::{locality, LocalityMetrics};
-use crate::sim::{simulate, CoreModel, SimResult, SystemConfig, SystemKind, CORE_SWEEP};
+use crate::sim::{
+    simulate_events, CoreModel, SimResult, SystemConfig, SystemKind, TraceAnalysis, CORE_SWEEP,
+};
 use crate::util::fault;
 use crate::util::json::Json;
-use crate::util::pool::{par_map_catch_opts, JobErrorKind, PoolOptions};
+use crate::util::pool::{self, par_map_catch_opts, JobErrorKind, PoolOptions};
 use crate::util::telemetry::{self, metrics};
 use crate::workloads::{FunctionSpec, Scale};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Process-wide count of `profile_function` invocations. Observability
-/// hook for the resume machinery: lets tests (and `--resume` users)
-/// verify that a resumed sweep recomputes only unfinished functions.
+/// Process-wide count of *completed* `profile_function` computations.
+/// Observability hook for the resume machinery: lets tests (and
+/// `--resume` users) verify that a resumed sweep recomputes only
+/// unfinished functions.
+///
+/// Ordering contract (pinned in `rust/tests/fault_injection.rs`): the
+/// increment happens *after* the whole sweep for the function has
+/// simulated, immediately before the profile is returned — and therefore
+/// (on the same worker thread) before `profile_all_checkpointed`'s
+/// completion hook appends the profile to the checkpoint. A panicking,
+/// cancelled, or retried attempt never increments, so the counter equals
+/// the number of profiles computed to completion and every checkpoint
+/// append is preceded by exactly one increment for that profile.
 static PROFILE_CALLS: AtomicU64 = AtomicU64::new(0);
 
-/// How many function profiles this process has computed (not cached).
+/// How many function profiles this process has computed to completion
+/// (not cached, not failed attempts). See [`PROFILE_CALLS`].
 pub fn profile_call_count() -> u64 {
     PROFILE_CALLS.load(Ordering::Relaxed)
 }
@@ -123,9 +136,36 @@ impl Default for SweepOptions {
     }
 }
 
-/// Simulate every (system, model, cores) point for one function.
+/// How the per-trace (system kind × core model) config-point fan-out
+/// schedules its replays. Every mode produces byte-identical profiles
+/// (`rust/tests/golden_profiles.rs` and `rust/tests/sim_properties.rs`
+/// prove it): the shared [`TraceAnalysis`] is read-only during replay,
+/// each config point simulates independently and deterministically, and
+/// results are collected in grid order regardless of completion order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayParallelism {
+    /// Borrow whatever the global thread budget (`util::pool`) has to
+    /// spare; degrades to serial when outer sweep workers hold it all.
+    Auto,
+    /// The serial reference path: the seed engine's nested config loop,
+    /// kept for bench baselines and golden-snapshot regeneration.
+    Serial,
+    /// Exactly `n` extra worker lanes, bypassing the budget (tests).
+    Extra(usize),
+}
+
+/// Simulate every (system, model, cores) point for one function, using
+/// the global thread budget for the per-trace config fan-out.
 pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfile {
-    PROFILE_CALLS.fetch_add(1, Ordering::Relaxed);
+    profile_function_tuned(spec, opt, ReplayParallelism::Auto)
+}
+
+/// [`profile_function`] with an explicit replay-scheduling mode.
+pub fn profile_function_tuned(
+    spec: &FunctionSpec,
+    opt: SweepOptions,
+    par: ReplayParallelism,
+) -> FunctionProfile {
     metrics::counter("sweep.functions_profiled").incr();
     let _span = telemetry::span_args(
         "profile",
@@ -142,9 +182,22 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
     if opt.nuca {
         kinds.push(SystemKind::HostNuca);
     }
-    // Iterate core counts outermost so each trace is generated exactly
-    // once and shared (borrowed, not cloned) by every system/model run.
-    let mut runs = Vec::with_capacity(opt.core_models.len() * kinds.len() * CORE_SWEEP.len());
+    // The (model, kind) grid in the exact order of the historical serial
+    // nested loop, so `runs` keeps its byte-identical order under
+    // parallel replay (par_map_extra preserves input order).
+    let mut points: Vec<(CoreModel, SystemKind)> =
+        Vec::with_capacity(opt.core_models.len() * kinds.len());
+    for &model in opt.core_models {
+        for &kind in &kinds {
+            points.push((model, kind));
+        }
+    }
+
+    // Iterate core counts outermost so each trace is generated — and its
+    // config-invariant analysis (SoA buffer, footprint, partitions,
+    // reuse histogram) computed — exactly once, then shared read-only by
+    // every config point.
+    let mut runs = Vec::with_capacity(points.len() * CORE_SWEEP.len());
     for &cores in CORE_SWEEP.iter() {
         let trace = {
             let _gen = telemetry::span_args(
@@ -156,17 +209,28 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
             );
             spec.trace(cores, opt.scale)
         };
-        for &model in opt.core_models {
-            for &kind in &kinds {
-                let cfg = SystemConfig::by_kind(kind, cores, model);
-                let result = simulate(&cfg, &trace);
-                runs.push(Run {
-                    kind,
-                    core_model: model,
-                    cores,
-                    result,
-                });
+        let analysis = TraceAnalysis::new(&trace);
+        // The SoA buffer is the only copy kept during replay.
+        drop(trace);
+        let replay_point = |&(model, kind): &(CoreModel, SystemKind)| -> SimResult {
+            simulate_events(&SystemConfig::by_kind(kind, cores, model), &analysis.events)
+        };
+        let results: Vec<SimResult> = match par {
+            ReplayParallelism::Serial => points.iter().map(replay_point).collect(),
+            ReplayParallelism::Auto => {
+                let lease = pool::budget_acquire(points.len().saturating_sub(1));
+                metrics::histogram("sweep.replay_lanes").record(lease.extra() as u64 + 1);
+                pool::par_map_extra(&points, lease.extra(), replay_point)
             }
+            ReplayParallelism::Extra(extra) => pool::par_map_extra(&points, extra, replay_point),
+        };
+        for (&(model, kind), result) in points.iter().zip(results) {
+            runs.push(Run {
+                kind,
+                core_model: model,
+                cores,
+                result,
+            });
         }
     }
 
@@ -188,7 +252,7 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
         })
         .collect();
 
-    FunctionProfile {
+    let profile = FunctionProfile {
         code: spec.id.code(),
         input: spec.id.input.clone(),
         suite: spec.id.suite.to_string(),
@@ -202,7 +266,15 @@ pub fn profile_function(spec: &FunctionSpec, opt: SweepOptions) -> FunctionProfi
         memory_bound: refrun.result.memory_bound,
         lfmr_by_cores,
         runs,
-    }
+    };
+    // Completed-profile counter, incremented only once the profile fully
+    // exists — after every simulation and before the caller (and thus any
+    // checkpoint-appending completion hook) can observe the profile. An
+    // attempt that panics, is cancelled, or gets retried above never
+    // reaches this line, so resume accounting stays exact under the
+    // parallel replay path (see the [`PROFILE_CALLS`] contract).
+    PROFILE_CALLS.fetch_add(1, Ordering::Relaxed);
+    profile
 }
 
 /// A function whose profiling produced no result: it panicked on every
@@ -244,7 +316,11 @@ impl std::fmt::Display for ProfileError {
 /// finishes — the coordinator uses it to append to the crash-safe
 /// checkpoint so an interrupted sweep can resume. A cancelled job
 /// unwinds before `on_complete`, so partial profiles never reach the
-/// checkpoint.
+/// checkpoint. Sequencing per profile (single worker thread, so the
+/// order is program order): simulate everything → increment
+/// [`profile_call_count`] → run `on_complete` (checkpoint append). A
+/// checkpoint record therefore implies its profile was already counted,
+/// which is what makes the resume test's call-count arithmetic exact.
 pub fn profile_all_checkpointed<C>(
     specs: &[FunctionSpec],
     opt: SweepOptions,

@@ -24,6 +24,7 @@ use super::cache::{Cache, LookupResult};
 use super::config::{CoreModel, SystemConfig, SystemKind};
 use super::dram::{md1_wait, Dram};
 use super::energy::{energy, EnergyBreakdown, EnergyEvents};
+use super::events::SoaTrace;
 use super::noc::{HopHistogram, Mesh};
 use super::prefetcher::StreamPrefetcher;
 use super::{Access, Trace};
@@ -143,17 +144,32 @@ pub fn simulate(cfg: &SystemConfig, trace: &Trace) -> SimResult {
     simulate_opt(cfg, trace, SimOptions::default())
 }
 
+/// Array-of-structs entry point: transposes the trace into the SoA
+/// replay buffer and runs the fast path. One-shot callers (unit tests,
+/// `damov sim`) land here; the sweep builds the buffer once per
+/// (function, cores) via [`super::TraceAnalysis`] and calls
+/// [`simulate_events`] directly so the transposition is not repeated
+/// per config point.
 pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimResult {
+    simulate_events_opt(cfg, &SoaTrace::from_trace(trace), opt)
+}
+
+/// Replay a pre-transposed [`SoaTrace`] (see [`simulate_opt`]).
+pub fn simulate_events(cfg: &SystemConfig, events: &SoaTrace) -> SimResult {
+    simulate_events_opt(cfg, events, SimOptions::default())
+}
+
+pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOptions) -> SimResult {
     assert_eq!(
-        trace.len(),
+        events.cores(),
         cfg.cores,
         "trace has {} threads but config has {} cores",
-        trace.len(),
+        events.cores(),
         cfg.cores
     );
     let n = cfg.cores;
     let line = cfg.l1.line_bytes as u64;
-    let total_accesses: usize = trace.iter().map(|t| t.len()).sum();
+    let total_accesses: usize = events.total_accesses();
     let _sim_span = telemetry::span_args(
         "simulate",
         vec![
@@ -210,7 +226,7 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
     while live > 0 {
         live = 0;
         for core in 0..n {
-            let t = &trace[core];
+            let t = &events.per_core[core];
             let mut i = cursors[core];
             if i >= t.len() {
                 continue;
@@ -221,8 +237,10 @@ pub fn simulate_opt(cfg: &SystemConfig, trace: &Trace, opt: SimOptions) -> SimRe
                 since_poll = 0;
                 cancel::poll();
             }
+            // SoA hot loop: each quantum reads the five columns as dense
+            // sequential streams (CoreEvents::get is inlined).
             while i < end {
-                let a = t[i];
+                let a = t.get(i);
                 i += 1;
                 replay_one(
                     cfg,
@@ -974,5 +992,27 @@ mod tests {
         assert_eq!(a.time_s, b.time_s);
         assert_eq!(a.l3_misses, b.l3_misses);
         assert_eq!(a.energy, b.energy);
+    }
+
+    #[test]
+    fn shared_soa_buffer_matches_per_call_transposition() {
+        // One SoA buffer replayed read-only across several configs (the
+        // sweep's memoized-TraceAnalysis pattern) must be byte-identical
+        // to transposing per call.
+        let t = chase_trace(2, 3_000, 1 << 16);
+        let soa = SoaTrace::from_trace(&t);
+        for cfg in [
+            SystemConfig::host(2, CoreModel::OutOfOrder),
+            SystemConfig::host_prefetch(2, CoreModel::InOrder),
+            SystemConfig::ndp(2, CoreModel::OutOfOrder),
+        ] {
+            let a = simulate(&cfg, &t);
+            let b = simulate_events(&cfg, &soa);
+            assert_eq!(a.time_s, b.time_s);
+            assert_eq!(a.l1_hits, b.l1_hits);
+            assert_eq!(a.l3_misses, b.l3_misses);
+            assert_eq!(a.dram_reads, b.dram_reads);
+            assert_eq!(a.energy, b.energy);
+        }
     }
 }

@@ -1,0 +1,250 @@
+//! Structure-of-arrays event batching + config-invariant trace analysis.
+//!
+//! The methodology replays the *same* generated trace across every
+//! (system kind × core model) config point of the sweep grid — exactly
+//! the redundant data movement the paper teaches us to eliminate. Two
+//! substrates make that replay fast:
+//!
+//! * [`SoaTrace`] — the access stream transposed into parallel columns
+//!   (addresses, packed flags, basic blocks, gaps, op counts). The replay
+//!   hot loop walks five dense arrays sequentially instead of striding
+//!   over 16-byte [`Access`] records, so each 64-access quantum stays in
+//!   a handful of cache lines and the hardware prefetchers see pure
+//!   streams.
+//! * [`TraceAnalysis`] — everything about a trace that does *not* depend
+//!   on the simulated system (footprint, per-thread access partitions,
+//!   line-reuse histogram) plus the SoA buffer itself, computed once per
+//!   (function, core count) and shared read-only by every config point
+//!   replayed from it (serially or on parallel lanes; see
+//!   `methodology::step3` and `docs/performance.md`).
+//!
+//! Conversion is lossless: replaying a [`SoaTrace`] visits the exact
+//! access sequence of the source [`Trace`], so simulation results are
+//! byte-identical to the array-of-structs engine
+//! (`rust/tests/golden_profiles.rs` pins this for the whole registry).
+
+use super::{Access, Trace, LINE};
+use crate::util::telemetry::{self, metrics};
+use std::collections::HashMap;
+
+/// [`CoreEvents::flags`] bit: the access is a store.
+pub const FLAG_WRITE: u8 = 1 << 0;
+/// [`CoreEvents::flags`] bit: the load's address depends on the previous
+/// load's data (pointer chasing).
+pub const FLAG_DEP: u8 = 1 << 1;
+
+/// One core's access stream in structure-of-arrays form. All five
+/// columns have identical length; element `i` of each column together
+/// reconstructs the `i`-th [`Access`] of the source stream.
+#[derive(Debug, Clone, Default)]
+pub struct CoreEvents {
+    pub addr: Vec<u64>,
+    /// Packed booleans: [`FLAG_WRITE`] | [`FLAG_DEP`].
+    pub flags: Vec<u8>,
+    pub bb: Vec<u8>,
+    pub gap: Vec<u16>,
+    pub ops: Vec<u16>,
+}
+
+impl CoreEvents {
+    pub fn from_accesses(accs: &[Access]) -> CoreEvents {
+        let n = accs.len();
+        let mut ev = CoreEvents {
+            addr: Vec::with_capacity(n),
+            flags: Vec::with_capacity(n),
+            bb: Vec::with_capacity(n),
+            gap: Vec::with_capacity(n),
+            ops: Vec::with_capacity(n),
+        };
+        for a in accs {
+            ev.addr.push(a.addr);
+            ev.flags
+                .push((a.write as u8) * FLAG_WRITE | (a.dep as u8) * FLAG_DEP);
+            ev.bb.push(a.bb);
+            ev.gap.push(a.gap);
+            ev.ops.push(a.ops);
+        }
+        ev
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.addr.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.addr.is_empty()
+    }
+
+    /// Reconstruct the `i`-th access. Inlined into the replay hot loop,
+    /// where the five column reads compile to sequential loads.
+    #[inline]
+    pub fn get(&self, i: usize) -> Access {
+        Access {
+            addr: self.addr[i],
+            write: self.flags[i] & FLAG_WRITE != 0,
+            dep: self.flags[i] & FLAG_DEP != 0,
+            bb: self.bb[i],
+            gap: self.gap[i],
+            ops: self.ops[i],
+        }
+    }
+}
+
+/// A multi-threaded trace in structure-of-arrays form: one
+/// [`CoreEvents`] column set per simulated core.
+#[derive(Debug, Clone, Default)]
+pub struct SoaTrace {
+    pub per_core: Vec<CoreEvents>,
+    total: usize,
+}
+
+impl SoaTrace {
+    pub fn from_trace(trace: &Trace) -> SoaTrace {
+        let per_core: Vec<CoreEvents> = trace
+            .iter()
+            .map(|t| CoreEvents::from_accesses(t))
+            .collect();
+        let total = per_core.iter().map(CoreEvents::len).sum();
+        SoaTrace { per_core, total }
+    }
+
+    /// Number of simulated cores (threads) in the trace.
+    pub fn cores(&self) -> usize {
+        self.per_core.len()
+    }
+
+    /// Total accesses across all cores.
+    pub fn total_accesses(&self) -> usize {
+        self.total
+    }
+
+    /// Transpose back to array-of-structs form (tests only; replay never
+    /// needs it).
+    pub fn to_trace(&self) -> Trace {
+        self.per_core
+            .iter()
+            .map(|ev| (0..ev.len()).map(|i| ev.get(i)).collect())
+            .collect()
+    }
+}
+
+/// Config-invariant precomputation for one (function, core count) trace:
+/// the SoA replay buffer plus summary statistics that hold for *every*
+/// system configuration replaying it (they depend only on the access
+/// stream and the fixed 64 B line size, never on cache geometry, core
+/// model, or system kind). Computed once, then shared read-only across
+/// all config points of the sweep grid.
+///
+/// The statistics are observational (telemetry/reporting); simulation
+/// results are produced solely by replaying [`TraceAnalysis::events`],
+/// which is why sharing the analysis cannot perturb byte-identity.
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    /// The replay buffer every config point consumes.
+    pub events: SoaTrace,
+    pub total_accesses: usize,
+    /// Accesses per thread (the generator's partition of the work).
+    pub per_thread_accesses: Vec<usize>,
+    /// Unique 64 B lines touched.
+    pub footprint_lines: u64,
+    pub footprint_bytes: u64,
+    /// Histogram of per-line touch counts, log2-bucketed: bucket `b`
+    /// counts lines touched in `[2^b, 2^(b+1))`. A mass at bucket 0 is a
+    /// streaming footprint; mass in high buckets is a hot working set.
+    pub reuse_hist: [u64; 32],
+    /// Mean touches per distinct line (locality summary).
+    pub mean_touches_per_line: f64,
+}
+
+impl TraceAnalysis {
+    pub fn new(trace: &Trace) -> TraceAnalysis {
+        Self::from_events(SoaTrace::from_trace(trace))
+    }
+
+    pub fn from_events(events: SoaTrace) -> TraceAnalysis {
+        let _span = telemetry::span("trace-analysis");
+        let per_thread_accesses: Vec<usize> =
+            events.per_core.iter().map(CoreEvents::len).collect();
+        let total_accesses = events.total_accesses();
+
+        let mut touches: HashMap<u64, u64> = HashMap::new();
+        for core in &events.per_core {
+            for &addr in &core.addr {
+                *touches.entry(addr / LINE as u64).or_insert(0) += 1;
+            }
+        }
+        let footprint_lines = touches.len() as u64;
+        let mut reuse_hist = [0u64; 32];
+        for &n in touches.values() {
+            let bucket = (63 - n.max(1).leading_zeros() as usize).min(31);
+            reuse_hist[bucket] += 1;
+        }
+        let mean_touches_per_line = total_accesses as f64 / footprint_lines.max(1) as f64;
+
+        metrics::counter("sweep.trace_analyses").incr();
+        metrics::histogram("sweep.footprint_lines").record(footprint_lines);
+
+        TraceAnalysis {
+            events,
+            total_accesses,
+            per_thread_accesses,
+            footprint_lines,
+            footprint_bytes: footprint_lines * LINE as u64,
+            reuse_hist,
+            mean_touches_per_line,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        vec![
+            vec![
+                Access::load(0, 2, 3),
+                Access::store(64, 0, 1),
+                Access::load_dep(128, 7, 0).in_bb(5),
+                Access::load(0, 1, 1),
+            ],
+            vec![Access::store(1 << 30, 9, 2)],
+            vec![],
+        ]
+    }
+
+    #[test]
+    fn soa_roundtrip_is_lossless() {
+        let t = sample_trace();
+        let soa = SoaTrace::from_trace(&t);
+        assert_eq!(soa.cores(), 3);
+        assert_eq!(soa.total_accesses(), 5);
+        assert_eq!(soa.to_trace(), t);
+    }
+
+    #[test]
+    fn flags_pack_write_and_dep_independently() {
+        let soa = SoaTrace::from_trace(&sample_trace());
+        let c0 = &soa.per_core[0];
+        assert_eq!(c0.flags[0], 0);
+        assert_eq!(c0.flags[1], FLAG_WRITE);
+        assert_eq!(c0.flags[2], FLAG_DEP);
+        assert_eq!(c0.get(2).bb, 5);
+    }
+
+    #[test]
+    fn analysis_counts_footprint_and_reuse() {
+        // Core 0 touches lines {0, 1, 2, 0}; core 1 touches one far line.
+        let ta = TraceAnalysis::new(&sample_trace());
+        assert_eq!(ta.total_accesses, 5);
+        assert_eq!(ta.per_thread_accesses, vec![4, 1, 0]);
+        assert_eq!(ta.footprint_lines, 4);
+        assert_eq!(ta.footprint_bytes, 4 * LINE as u64);
+        // Three lines touched once (bucket 0), one touched twice (bucket 1).
+        assert_eq!(ta.reuse_hist[0], 3);
+        assert_eq!(ta.reuse_hist[1], 1);
+        assert!((ta.mean_touches_per_line - 1.25).abs() < 1e-12);
+    }
+}

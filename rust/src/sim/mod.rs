@@ -8,11 +8,13 @@ pub mod config;
 pub mod dram;
 pub mod energy;
 pub mod engine;
+pub mod events;
 pub mod noc;
 pub mod prefetcher;
 
 pub use config::{CoreModel, SystemConfig, SystemKind, CORE_SWEEP, LINE};
-pub use engine::{simulate, SimResult};
+pub use engine::{simulate, simulate_events, SimResult};
+pub use events::{SoaTrace, TraceAnalysis};
 
 /// One memory reference in a workload trace.
 ///

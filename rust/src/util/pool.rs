@@ -47,6 +47,177 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+// ---------------------------------------------------------------------
+// Global thread budget — the nested-parallelism rule.
+// ---------------------------------------------------------------------
+//
+// Two parallel levels run at once in a sweep: the outer function fan-out
+// (`par_map_catch_opts`) and the inner per-trace config-point fan-out
+// (`par_map_extra` in `methodology::step3`). Left unguarded they would
+// multiply into `outer × inner` OS threads. Instead, every *spawned*
+// worker thread is registered against one process-global budget of
+// [`budget_total`] lanes: outer pools register unconditionally (the
+// level the user sized with `--threads` always gets what it asked for),
+// while inner levels borrow opportunistically via [`budget_acquire`] and
+// degrade to serial-on-the-calling-thread when nothing is spare. The
+// calling thread itself is never counted — blocked callers cost nothing,
+// and a caller participating in its own inner map is an already-counted
+// (or top-level) thread. See `docs/performance.md`.
+
+/// Spawned worker threads currently registered against the budget.
+static BUDGET_IN_USE: AtomicUsize = AtomicUsize::new(0);
+
+/// Size of the global thread budget: [`default_threads`] (i.e.
+/// `DAMOV_THREADS` or available parallelism).
+pub fn budget_total() -> usize {
+    default_threads()
+}
+
+/// Worker threads currently drawn from the budget (outer pool workers
+/// plus borrowed inner lanes). Observability hook.
+pub fn budget_in_use() -> usize {
+    BUDGET_IN_USE.load(Ordering::Acquire)
+}
+
+/// RAII registration of worker threads against the global budget.
+pub struct BudgetLease {
+    n: usize,
+}
+
+impl BudgetLease {
+    /// How many *extra* worker threads this lease grants. The calling
+    /// thread always keeps its own lane on top of this.
+    pub fn extra(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for BudgetLease {
+    fn drop(&mut self) {
+        if self.n > 0 {
+            BUDGET_IN_USE.fetch_sub(self.n, Ordering::AcqRel);
+            metrics::gauge("pool.budget_in_use").set(budget_in_use() as f64);
+        }
+    }
+}
+
+/// Unconditionally register `n` spawned workers (an outer pool claiming
+/// the threads the user asked for). May oversubscribe the machine if
+/// `--threads` exceeds the budget; only opportunistic inner levels
+/// degrade, never the explicit outer request.
+fn budget_charge(n: usize) -> BudgetLease {
+    BUDGET_IN_USE.fetch_add(n, Ordering::AcqRel);
+    metrics::gauge("pool.budget_in_use").set(budget_in_use() as f64);
+    BudgetLease { n }
+}
+
+/// Borrow up to `want` extra worker threads from whatever the budget has
+/// to spare. Never blocks and never fails: with the budget exhausted the
+/// lease grants 0 extra lanes and the caller runs serially on its own
+/// thread, so nested parallelism can never deadlock or multiply levels.
+pub fn budget_acquire(want: usize) -> BudgetLease {
+    let total = budget_total();
+    loop {
+        let used = BUDGET_IN_USE.load(Ordering::Acquire);
+        let take = want.min(total.saturating_sub(used));
+        if take == 0 {
+            return BudgetLease { n: 0 };
+        }
+        if BUDGET_IN_USE
+            .compare_exchange(used, used + take, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            metrics::gauge("pool.budget_in_use").set(budget_in_use() as f64);
+            return BudgetLease { n: take };
+        }
+    }
+}
+
+/// Parallel map on the *calling* thread plus up to `extra` borrowed
+/// worker threads (typically granted by [`budget_acquire`]). Unlike
+/// [`par_map`], the caller participates in the work, so `extra = 0`
+/// degrades to a plain serial map with zero thread overhead — the shape
+/// the inner config-point fan-out needs when outer sweep workers hold
+/// the whole budget.
+///
+/// The caller's installed [`CancelToken`] (if any) is propagated to the
+/// borrowed workers, so a watchdog soft-cancel of the outer job reaches
+/// nested replays at their next [`cancel::poll`]. A panic on any lane
+/// (including a cancellation unwind) aborts the map — remaining items
+/// are skipped — and is re-raised on the calling thread with its
+/// original payload, preserving [`cancel::CANCEL_MARKER`] semantics for
+/// the outer `run_caught` boundary. Result order matches input order.
+pub fn par_map_extra<T, R, F>(items: &[T], extra: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let extra = extra.min(n.saturating_sub(1));
+    if extra == 0 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let token = cancel::current();
+
+    // Shared lane body. Per-item catch_unwind (rather than letting the
+    // scope propagate) keeps the original panic payload: std's scope
+    // replaces a child's payload with a generic message, which would
+    // erase the cancellation marker.
+    let work = |tok: Option<CancelToken>| {
+        let _guard = tok.map(cancel::install);
+        loop {
+            if abort.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+                Ok(r) => *results[i].lock().unwrap() = Some(r),
+                Err(payload) => {
+                    abort.store(true, Ordering::Relaxed);
+                    let mut slot = first_panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    break;
+                }
+            }
+        }
+    };
+
+    std::thread::scope(|scope| {
+        let work = &work;
+        for _ in 0..extra {
+            let tok = token.clone();
+            scope.spawn(move || work(tok));
+        }
+        // The calling thread participates; its token (if any) is already
+        // installed thread-locally.
+        work(None);
+    });
+
+    if let Some(payload) = first_panic.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        std::panic::resume_unwind(payload);
+    }
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, m)| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .unwrap_or_else(|| unreachable!("par_map_extra job {i}/{n} missing result"))
+        })
+        .collect()
+}
+
 /// Apply `f` to every item of `items` in parallel, preserving order of
 /// results. `f` must be `Sync` (called concurrently from many threads).
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
@@ -67,6 +238,7 @@ where
     let cursor = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
 
+    let _budget = budget_charge(threads);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -522,6 +694,12 @@ where
     let stop = AtomicBool::new(false);
     let live_workers = AtomicUsize::new(threads);
 
+    // Register the spawned workers against the global thread budget so
+    // nested inner fan-outs (par_map_extra via budget_acquire) only
+    // borrow lanes this pool is not already using. The watchdog is not
+    // CPU-bound and is not counted.
+    let _budget = budget_charge(threads);
+
     std::thread::scope(|scope| {
         for w in 0..threads {
             let cursor = &cursor;
@@ -718,6 +896,93 @@ mod tests {
         let out = par_map_catch_opts(&items, &PoolOptions::new(4, 0), |&x| x + 1);
         let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
         assert_eq!(vals, (1..=50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_extra_matches_serial_for_any_lane_count() {
+        let items: Vec<u64> = (0..257).collect();
+        let want: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for extra in [0, 1, 2, 7] {
+            assert_eq!(par_map_extra(&items, extra, |&x| x * 3 + 1), want);
+        }
+        let empty: Vec<u64> = vec![];
+        assert!(par_map_extra(&empty, 4, |&x| x).is_empty());
+        // extra is clamped to items.len() - 1, so a single item runs on
+        // the calling thread alone.
+        assert_eq!(par_map_extra(&[9u64], 8, |&x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn par_map_extra_runs_every_item_exactly_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..500).collect();
+        let _ = par_map_extra(&items, 3, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn par_map_extra_preserves_panic_payload() {
+        let items: Vec<u32> = (0..64).collect();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            par_map_extra(&items, 3, |&x| {
+                if x == 13 {
+                    panic!("original payload intact");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap();
+        assert!(msg.contains("original payload intact"), "msg={msg}");
+    }
+
+    #[test]
+    fn par_map_extra_propagates_cancellation_to_borrowed_lanes() {
+        // A pre-cancelled token installed on the caller must reach every
+        // lane: each job polls, unwinds with the marker, and the marker
+        // payload is re-raised on the caller (so the outer run_caught
+        // boundary classifies it as cancelled, not panicked).
+        install_cancel_panic_hook();
+        let token = cancel::CancelToken::new();
+        let _guard = cancel::install(token.clone());
+        token.cancel(CancelReason::Shutdown);
+        let items: Vec<u32> = (0..32).collect();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            par_map_extra(&items, 3, |&x| {
+                cancel::poll();
+                x
+            })
+        }));
+        let payload = caught.expect_err("cancelled map must unwind");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap();
+        assert!(msg.contains(cancel::CANCEL_MARKER), "msg={msg}");
+    }
+
+    #[test]
+    fn budget_acquire_never_exceeds_total_and_releases_on_drop() {
+        // Other tests in this binary use the budget concurrently, so only
+        // invariants that hold under interleaving are asserted.
+        let total = budget_total();
+        assert!(total >= 1);
+        let a = budget_acquire(0);
+        assert_eq!(a.extra(), 0);
+        let b = budget_acquire(usize::MAX >> 1);
+        assert!(b.extra() <= total, "lease {} > budget {total}", b.extra());
+        assert!(budget_in_use() >= b.extra());
+        let before = budget_in_use();
+        drop(b);
+        assert!(budget_in_use() <= before);
     }
 
     #[test]

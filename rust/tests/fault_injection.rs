@@ -10,7 +10,9 @@
 //! would race. Everything sequential lives here, in order.
 
 use damov::coordinator::{store, sweep_fingerprint, Coordinator};
-use damov::methodology::step3::{profile_call_count, FunctionProfile, SweepOptions};
+use damov::methodology::step3::{
+    profile_call_count, profile_function_tuned, FunctionProfile, ReplayParallelism, SweepOptions,
+};
 use damov::util::fault::{self, FaultSpec};
 use damov::workloads::{registry, Scale};
 
@@ -129,6 +131,47 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
     // Completed: cache written and keyed, checkpoint retired.
     assert!(!ck.exists());
     assert!(store::load_profiles_keyed(&dir.join("profiles-res.json"), &fp).is_some());
+
+    // --- 6. Parallel config replay under faults == serial clean run,
+    //        and the call counter counts exactly the completions. -------
+    // Serial reference: the historical one-config-at-a-time replay loop,
+    // no faults, no worker pool.
+    let serial_ref: Vec<FunctionProfile> = specs
+        .iter()
+        .map(|s| profile_function_tuned(s, opt, ReplayParallelism::Serial))
+        .collect();
+    assert_eq!(
+        serialize(&clean),
+        serialize(&serial_ref),
+        "parallel coordinator sweep must equal the serial replay reference"
+    );
+    // Faulty parallel run: outer workers AND inner config-point lanes
+    // race while ~10% of jobs panic at the sim boundary and I/O faults
+    // hit the store; retries must converge to the same bytes.
+    fault::reset_attempts();
+    fault::set_override(Some(FaultSpec {
+        panic_p: 0.1,
+        io_p: 0.1,
+        seed: 77,
+        ..Default::default()
+    }));
+    let calls_before = profile_call_count();
+    let par_faulty = Coordinator::new(&dir, 2)
+        .with_recovery(8, false)
+        .profiles("fi-par", &specs, opt, true);
+    fault::set_override(None);
+    assert_eq!(par_faulty.len(), 4);
+    assert_eq!(
+        profile_call_count() - calls_before,
+        4,
+        "profile_call_count increments once per COMPLETED profile: \
+         panicked/retried attempts never count (completion-ordered contract)"
+    );
+    assert_eq!(
+        serialize(&serial_ref),
+        serialize(&par_faulty),
+        "faulty parallel-replay sweep must converge to the serial reference bytes"
+    );
 
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,116 @@
+//! Golden-profile regression harness: pins the byte-exact serialized
+//! profile of **every** registry workload at `Scale::tiny()`, and proves
+//! the SoA/parallel replay fast path reproduces the serial reference
+//! bit-for-bit.
+//!
+//! Three layers of protection:
+//!
+//! 1. `parallel == serial` is asserted in-process for all 144 functions,
+//!    independent of any committed file — a scheduling or SoA bug fails
+//!    here even on a machine that has never seen the golden file.
+//! 2. The serialized lines are compared against the committed
+//!    `tests/golden/profiles-tiny.jsonl`, so a *semantic* drift in the
+//!    simulator (timing model, energy, locality, trace generators)
+//!    cannot land silently: it shows up as a reviewable golden diff.
+//! 3. Fixed-lane schedules (`Extra(k)`) are checked against serial on a
+//!    spread of workloads, covering the scheduler paths `Auto` may not
+//!    take on a small CI machine.
+//!
+//! Bootstrap / regeneration: if the golden file is missing, the test
+//! writes it from the serial reference and passes (first run on a fresh
+//! checkout commits the baseline). To intentionally update after a
+//! semantic change, run with `DAMOV_GOLDEN_REGEN=1` and commit the diff.
+
+use damov::coordinator::store;
+use damov::methodology::step3::{profile_function_tuned, ReplayParallelism, SweepOptions};
+use damov::util::pool::{default_threads, par_map};
+use damov::workloads::{registry, FunctionSpec, Scale};
+use std::path::PathBuf;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/profiles-tiny.jsonl")
+}
+
+fn sweep_opt() -> SweepOptions {
+    SweepOptions {
+        scale: Scale::tiny(),
+        ..Default::default()
+    }
+}
+
+/// One canonical golden line: the compact-JSON serialization the sweep
+/// cache and checkpoints use (`store::profile_to_json`), so the golden
+/// file pins exactly the bytes persistence would write.
+fn profile_line(spec: &FunctionSpec, par: ReplayParallelism) -> String {
+    store::profile_to_json(&profile_function_tuned(spec, sweep_opt(), par)).to_string_compact()
+}
+
+fn header(functions: usize) -> String {
+    format!(
+        "{{\"golden\":\"profiles-tiny\",\"schema\":1,\"scale\":0.05,\"functions\":{functions}}}"
+    )
+}
+
+#[test]
+fn golden_profiles_parallel_matches_serial_and_committed_file() {
+    let specs = registry::all_functions();
+    let threads = default_threads();
+
+    // Serial reference: the historical one-config-at-a-time nested loop.
+    let serial: Vec<String> = par_map(&specs, threads, |s| {
+        profile_line(s, ReplayParallelism::Serial)
+    });
+    // Production fast path: shared TraceAnalysis + budget-driven lanes.
+    let parallel: Vec<String> = par_map(&specs, threads, |s| {
+        profile_line(s, ReplayParallelism::Auto)
+    });
+    for ((spec, s), p) in specs.iter().zip(&serial).zip(&parallel) {
+        assert_eq!(s, p, "parallel replay diverged from serial for {}", spec.id.code());
+    }
+
+    let mut lines = vec![header(specs.len())];
+    lines.extend(serial);
+    let contents = lines.join("\n") + "\n";
+
+    let path = golden_path();
+    let regen = std::env::var_os("DAMOV_GOLDEN_REGEN").is_some();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &contents).unwrap();
+        eprintln!(
+            "golden: {} {} ({} profiles)",
+            if regen { "regenerated" } else { "bootstrapped" },
+            path.display(),
+            specs.len()
+        );
+        return;
+    }
+
+    let committed = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        committed,
+        contents,
+        "serialized profiles drifted from {} — if the semantic change is \
+         intentional, regenerate with DAMOV_GOLDEN_REGEN=1 and commit the diff",
+        path.display()
+    );
+}
+
+/// Fixed lane counts (including over-provisioned ones) must reproduce
+/// the serial bytes too; `Auto` may never pick these on a busy or small
+/// machine, so they get their own coverage on a class-diverse subset.
+#[test]
+fn golden_profiles_fixed_lane_counts_match_serial() {
+    let codes = ["STRTriad", "CHAHsti", "PLYgemver", "HSJNPO", "RODNw"];
+    for code in codes {
+        let spec = registry::by_code(code).unwrap_or_else(|| panic!("unknown code {code}"));
+        let reference = profile_line(&spec, ReplayParallelism::Serial);
+        for extra in [1usize, 2, 7] {
+            assert_eq!(
+                reference,
+                profile_line(&spec, ReplayParallelism::Extra(extra)),
+                "Extra({extra}) replay diverged from serial for {code}"
+            );
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Property-based invariants for the simulation models and the SoA
+//! replay fast path, on the `util::prop` harness (many seeded random
+//! cases; failures print the reproducing seed).
+//!
+//! Four families:
+//! * LRU stack property — with the set count fixed, a bigger cache
+//!   (more ways) can never hit less on the same access sequence.
+//! * DRAM accounting — every access is exactly one of row hit / miss /
+//!   conflict, so the row-hit rate is always a true fraction in [0, 1].
+//! * SoA transposition — lossless for arbitrary traces, the foundation
+//!   of the replay fast path's byte-identity argument.
+//! * Replay determinism — profile bytes are invariant under the replay
+//!   schedule (serial, any fixed lane count, budget-driven `Auto`),
+//!   i.e. under arbitrary config-point completion orders.
+
+use damov::coordinator::store;
+use damov::methodology::step3::{profile_function_tuned, ReplayParallelism, SweepOptions};
+use damov::sim::cache::Cache;
+use damov::sim::config::CacheConfig;
+use damov::sim::dram::Dram;
+use damov::sim::{Access, CoreModel, SoaTrace, SystemConfig, Trace};
+use damov::util::prop;
+use damov::workloads::{registry, Scale};
+
+/// With sets fixed, growing the way count strictly grows every set's LRU
+/// stack, so true-LRU hits are monotonically non-decreasing (the classic
+/// stack property — Mattson et al.). This is the invariant behind the
+/// sweep's premise that cache size separates the DAMOV classes.
+#[test]
+fn lru_cache_hits_monotone_in_ways_at_fixed_sets() {
+    prop::check(40, |rng| {
+        let sets = 1usize << rng.gen_usize(2, 6); // 4..32 sets
+        let n = rng.gen_usize(200, 1200);
+        // Footprint around the mid-size capacity so small configs thrash
+        // and large ones mostly hit — both sides of the stack exercised.
+        let lines = (sets * 12).max(8) as u64;
+        let seq: Vec<(u64, bool)> = (0..n)
+            .map(|_| (rng.gen_range(lines) * 64, rng.gen_bool(0.3)))
+            .collect();
+        let mut prev_hits = 0u64;
+        for (i, ways) in [1usize, 2, 4, 8].into_iter().enumerate() {
+            let cfg = CacheConfig {
+                size_bytes: 64 * sets * ways,
+                ways,
+                line_bytes: 64,
+                latency_cycles: 4,
+                epj_hit: 1.0,
+                epj_miss: 1.0,
+            };
+            let mut cache = Cache::new(&cfg);
+            for &(addr, write) in &seq {
+                cache.access(addr, write);
+            }
+            assert_eq!(cache.hits + cache.misses, n as u64);
+            assert!(
+                i == 0 || cache.hits >= prev_hits,
+                "stack property violated: {} ways hit {} < smaller cache's {}",
+                ways,
+                cache.hits,
+                prev_hits
+            );
+            prev_hits = cache.hits;
+        }
+    });
+}
+
+/// Every DRAM access lands in exactly one row-buffer outcome and one
+/// vault, so the totals partition the access count and the row-hit rate
+/// is a genuine fraction in [0, 1] for any address mix.
+#[test]
+fn dram_row_outcomes_partition_accesses() {
+    prop::check(40, |rng| {
+        let cfg = SystemConfig::host(1, CoreModel::OutOfOrder).dram;
+        let mut dram = Dram::new(&cfg);
+        let n = rng.gen_usize(100, 2000);
+        // Mix streaming (row-hit friendly) and random far jumps
+        // (miss/conflict friendly) so all three outcomes occur across
+        // the case population.
+        let mut addr = rng.next_u64() >> 20;
+        for _ in 0..n {
+            if rng.gen_bool(0.7) {
+                addr = addr.wrapping_add(64);
+            } else {
+                addr = rng.next_u64() >> rng.gen_usize(8, 28);
+            }
+            dram.access(addr, rng.gen_bool(0.3));
+        }
+        let s = &dram.stats;
+        assert_eq!(s.reads + s.writes, n as u64);
+        assert_eq!(s.row_hits + s.row_misses + s.row_conflicts, n as u64);
+        assert_eq!(s.vault_accesses.iter().sum::<u64>(), n as u64);
+        let rate = s.row_hits as f64 / n as f64;
+        assert!((0.0..=1.0).contains(&rate), "row-hit rate {rate} out of range");
+    });
+}
+
+/// SoA transposition must be lossless for arbitrary traces — including
+/// empty per-core streams and extreme field values — since replay
+/// correctness is argued from `SoaTrace::get(i)` reconstructing the
+/// exact access sequence.
+#[test]
+fn soa_roundtrip_preserves_arbitrary_traces() {
+    prop::check(60, |rng| {
+        let cores = rng.gen_usize(1, 6);
+        let trace: Trace = (0..cores)
+            .map(|_| {
+                let n = rng.gen_usize(0, 200);
+                (0..n)
+                    .map(|_| Access {
+                        addr: rng.next_u64() >> rng.gen_usize(0, 33),
+                        write: rng.gen_bool(0.3),
+                        dep: rng.gen_bool(0.2),
+                        bb: rng.gen_range(256) as u8,
+                        gap: rng.gen_range(1 << 16) as u16,
+                        ops: rng.gen_range(1 << 16) as u16,
+                    })
+                    .collect()
+            })
+            .collect();
+        let soa = SoaTrace::from_trace(&trace);
+        assert_eq!(soa.cores(), cores);
+        assert_eq!(soa.total_accesses(), trace.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(soa.to_trace(), trace);
+    });
+}
+
+/// Profile bytes must not depend on how config-point replays are
+/// scheduled: serial, any fixed lane count (lanes race, so completion
+/// order is effectively shuffled every run), or whatever `Auto`'s budget
+/// negotiation picks on this machine. Serialized-byte equality is the
+/// same criterion the golden harness and the sweep cache use.
+#[test]
+fn replay_profile_bytes_invariant_under_lane_schedule() {
+    let codes = ["STRTriad", "CHAHsti", "SPLLucb", "HSJNPO"];
+    prop::check(6, |rng| {
+        let code = codes[rng.gen_usize(0, codes.len())];
+        let spec = registry::by_code(code).unwrap();
+        let opt = SweepOptions {
+            scale: Scale(0.02 + rng.gen_f64() * 0.04),
+            ..Default::default()
+        };
+        let bytes = |par| {
+            store::profile_to_json(&profile_function_tuned(&spec, opt, par)).to_string_compact()
+        };
+        let reference = bytes(ReplayParallelism::Serial);
+        let extra = rng.gen_usize(1, 9);
+        assert_eq!(
+            reference,
+            bytes(ReplayParallelism::Extra(extra)),
+            "Extra({extra}) diverged from serial for {code}"
+        );
+        assert_eq!(
+            reference,
+            bytes(ReplayParallelism::Auto),
+            "Auto diverged from serial for {code}"
+        );
+    });
+}
