@@ -16,7 +16,7 @@ fn main() {
         let r = simulate(&cfg, &t);
         println!(
             "{:8} perf={:9.1} ipc={:5.2} mb={:.2} mpki={:6.2} lfmr={:.3} ai={:5.1} amat={:6.1} parts={:?} fracs={:?} rho={:.2} dlat={:6.1} bw={:.1}GB/s",
-            r.kind.label(), r.perf(), r.ipc, r.memory_bound, r.mpki, r.lfmr, r.ai, r.amat,
+            r.system, r.perf(), r.ipc, r.memory_bound, r.mpki, r.lfmr, r.ai, r.amat,
             r.amat_parts.map(|x| x.round()), r.level_fracs.map(|x| (x*100.0).round()),
             r.dram_rho, r.dram_loaded_lat, r.bw_bytes_s/1e9,
         );

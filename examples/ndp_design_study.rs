@@ -1,13 +1,68 @@
 //! Scenario example: using DAMOV to drive an NDP design-space question —
-//! "should my NDP use few big cores or many small ones, and does the
-//! inter-vault network matter for my workload mix?" (case studies 1+3
-//! turned into a reusable driver).
+//! "should my NDP use few big cores or many small ones, does the
+//! inter-vault network matter for my workload mix, and how much L1 does
+//! an NDP core actually need?" (case studies 1+3 turned into a reusable
+//! driver, plus a spec-builder L1 ablation).
 //!
 //! Run: `cargo run --release --example ndp_design_study [codes...]`
 
+use damov::methodology::classify::{self, Features};
+use damov::methodology::locality;
+use damov::methodology::step3::{profile_function, SweepOptions};
 use damov::sim::engine::{simulate_opt, SimOptions};
-use damov::sim::{simulate, CoreModel, SystemConfig};
-use damov::workloads::{registry, Scale};
+use damov::sim::{simulate, CoreModel, MemoryBackend, SystemConfig, SystemSpec};
+use damov::workloads::{registry, FunctionSpec, Scale};
+
+/// Three in-vault core designs differing only in L1 capacity, expressed
+/// as custom [`SystemSpec`]s through the builder API — the same objects
+/// `damov report --systems my.json` loads from JSON.
+fn l1_ablation_specs() -> Vec<SystemSpec> {
+    [16usize, 32, 64]
+        .into_iter()
+        .map(|kib| {
+            SystemSpec::builder(&format!("ndp-l1-{kib}k"))
+                .backend(MemoryBackend::DirectVault)
+                .read_only_l1(true)
+                .private_cache(kib << 10, 8, 4, 15.0, 33.0)
+                .build()
+                .expect("ablation spec must validate")
+        })
+        .collect()
+}
+
+/// Same calibrated thresholds `damov characterize` uses (§3.5.1).
+fn thresholds() -> classify::Thresholds {
+    classify::Thresholds {
+        temporal: 0.30,
+        ai: 8.5,
+        mpki: 45.0,
+        lfmr: 0.56,
+        slope_dec: -0.25,
+        slope_inc: 0.25,
+    }
+}
+
+/// Sweep one function under one candidate spec and report the metrics
+/// that drive the bottleneck classification.
+fn ablate(spec: &FunctionSpec, sys: &SystemSpec, scale: Scale) -> (f64, f64, f64, &'static str) {
+    let p = profile_function(
+        spec,
+        SweepOptions {
+            systems: vec![sys.clone()],
+            scale,
+            ..Default::default()
+        },
+    );
+    let loc = locality::locality(&spec.locality_trace(scale));
+    let mut feats = Features::of(&p);
+    feats.temporal = loc.temporal;
+    let class = classify::classify(&feats, &thresholds());
+    let perf = p
+        .run(&sys.name, CoreModel::OutOfOrder, 256)
+        .map(|r| r.result.perf())
+        .unwrap_or(f64::NAN);
+    (perf, p.mpki, p.lfmr_mean(), class.label())
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -57,5 +112,35 @@ fn main() {
          (the paper's case study 3); the mesh column is the price of remote\n\
          vault traffic (case study 1) — high values argue for smarter data\n\
          placement before adding cores."
+    );
+
+    // --- L1 ablation: three NDP spec variants via the builder API. -----
+    let variants = l1_ablation_specs();
+    let ablation_scale = Scale(0.1);
+    println!(
+        "\nNDP L1 ablation (spec builder; perf = OoO @ 256 cores, scale {}):",
+        ablation_scale.0
+    );
+    println!(
+        "{:12} {:>12} {:>12} {:>8} {:>8} {:>6}",
+        "function", "spec", "perf", "mpki", "lfmr", "class"
+    );
+    for code in &codes {
+        let Some(spec) = registry::by_code(code) else {
+            continue;
+        };
+        for sys in &variants {
+            let (perf, mpki, lfmr, class) = ablate(&spec, sys, ablation_scale);
+            println!(
+                "{:12} {:>12} {:>12.1} {:>8.2} {:>8.3} {:>6}",
+                code, sys.name, perf, mpki, lfmr, class
+            );
+        }
+    }
+    println!(
+        "\nReading: if a function's class and LFMR barely move from 16k to\n\
+         64k, its working set never fit anyway — spend the vault area on\n\
+         cores, not cache. Class shifts (e.g. 1a -> 2b) mark functions\n\
+         whose bottleneck an in-vault L1 can actually remove."
     );
 }

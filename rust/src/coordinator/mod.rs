@@ -27,7 +27,7 @@ pub mod store;
 use crate::methodology::step3::{
     profile_all_checkpointed, FunctionProfile, ProfileError, SweepOptions,
 };
-use crate::sim::{CoreModel, CORE_SWEEP};
+use crate::sim::{CoreModel, SystemSpec, CORE_SWEEP};
 use crate::util::json::Json;
 use crate::util::pool::{JobErrorKind, PoolOptions};
 use crate::util::telemetry::{self, metrics};
@@ -37,18 +37,28 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Fingerprint identifying a sweep: which functions, which options,
-/// which record layout. Caches and checkpoints are only trusted when
-/// their recorded fingerprint matches the sweep being requested. Keyed
-/// by [`store::RECORD_VERSION`] (not the document schema version), so a
-/// document-schema bump that leaves records unchanged — like v2→v3 —
-/// keeps old checkpoints resumable and old caches servable.
+/// which systems (each [`SystemSpec`]'s own content fingerprint is
+/// folded in, so editing a custom spec's JSON — or respelling it into
+/// an identical normal form — changes or preserves the sweep key
+/// exactly when it should), which record layout. Caches and checkpoints
+/// are only trusted when their recorded fingerprint matches the sweep
+/// being requested. Keyed by [`store::RECORD_VERSION`] (not the
+/// document schema version), so a document-schema bump that leaves
+/// records unchanged — like v2→v3 — keeps old checkpoints resumable
+/// and old caches servable.
 pub fn sweep_fingerprint(specs: &[FunctionSpec], opt: &SweepOptions) -> String {
     let mut text = format!(
-        "schema={};scale={:x};nuca={};",
+        "schema={};scale={:x};",
         store::RECORD_VERSION,
         opt.scale.0.to_bits(),
-        opt.nuca
     );
+    for sys in &opt.systems {
+        text.push_str(&sys.name);
+        text.push(':');
+        text.push_str(&sys.fingerprint());
+        text.push(',');
+    }
+    text.push(';');
     for m in opt.core_models {
         text.push_str(match m {
             CoreModel::OutOfOrder => "ooo,",
@@ -325,13 +335,24 @@ impl Coordinator {
         scale: Scale,
         limit: Option<usize>,
     ) -> (Vec<FunctionSpec>, SweepOptions) {
+        Coordinator::representative_sweep_systems(scale, limit, SystemSpec::paper_sweep())
+    }
+
+    /// [`representative_sweep`](Coordinator::representative_sweep) over
+    /// an explicit system list (`--systems`): same specs and core
+    /// models, custom [`SystemSpec`]s.
+    pub fn representative_sweep_systems(
+        scale: Scale,
+        limit: Option<usize>,
+        systems: Vec<SystemSpec>,
+    ) -> (Vec<FunctionSpec>, SweepOptions) {
         let mut specs = registry::representatives();
         if let Some(l) = limit {
             specs.truncate(l);
         }
         let opt = SweepOptions {
             core_models: &[CoreModel::OutOfOrder, CoreModel::InOrder],
-            nuca: true,
+            systems,
             scale,
         };
         (specs, opt)
@@ -355,6 +376,24 @@ impl Coordinator {
         limit: Option<usize>,
     ) -> Vec<FunctionProfile> {
         let (specs, opt) = Coordinator::representative_sweep(scale, limit);
+        self.profiles("reps", &specs, opt, refresh)
+    }
+
+    /// [`representative_profiles_scaled`] over an explicit system list
+    /// (`--systems`). The cache/checkpoint tag stays `reps`; the sweep
+    /// fingerprint (which embeds every spec's content hash) keeps runs
+    /// over different system lists from ever serving each other's
+    /// cached profiles.
+    ///
+    /// [`representative_profiles_scaled`]: Coordinator::representative_profiles_scaled
+    pub fn representative_profiles_systems(
+        &self,
+        refresh: bool,
+        scale: Scale,
+        limit: Option<usize>,
+        systems: Vec<SystemSpec>,
+    ) -> Vec<FunctionProfile> {
+        let (specs, opt) = Coordinator::representative_sweep_systems(scale, limit, systems);
         self.profiles("reps", &specs, opt, refresh)
     }
 
@@ -388,7 +427,18 @@ impl Coordinator {
         scale: Scale,
         limit: Option<usize>,
     ) -> Vec<store::RetryableRecord> {
-        let (specs, opt) = Coordinator::representative_sweep(scale, limit);
+        self.representative_retryable_systems(scale, limit, SystemSpec::paper_sweep())
+    }
+
+    /// [`representative_retryable`](Coordinator::representative_retryable)
+    /// for a sweep over an explicit system list (`--systems`).
+    pub fn representative_retryable_systems(
+        &self,
+        scale: Scale,
+        limit: Option<usize>,
+        systems: Vec<SystemSpec>,
+    ) -> Vec<store::RetryableRecord> {
+        let (specs, opt) = Coordinator::representative_sweep_systems(scale, limit, systems);
         self.retryable("reps", &specs, &opt)
     }
 
@@ -398,7 +448,7 @@ impl Coordinator {
         let specs = registry::validation_variants();
         let opt = SweepOptions {
             core_models: &[CoreModel::OutOfOrder],
-            nuca: false,
+            systems: SystemSpec::default_sweep(),
             scale: Scale::full(),
         };
         self.profiles("holdout", &specs, opt, refresh)
@@ -428,7 +478,7 @@ mod tests {
             scale: Scale(0.05),
             ..Default::default()
         };
-        let a = coord.profiles("t", &specs, opt, true);
+        let a = coord.profiles("t", &specs, opt.clone(), true);
         assert_eq!(a.len(), 2);
         // Second call must hit the cache (same values back).
         let b = coord.profiles("t", &specs, opt, false);
@@ -450,11 +500,11 @@ mod tests {
         let reps = registry::representatives();
         let first: Vec<_> = reps.iter().take(2).cloned().collect();
         let second: Vec<_> = reps.iter().skip(2).take(2).cloned().collect();
-        let a = coord.profiles("s", &first, opt, true);
+        let a = coord.profiles("s", &first, opt.clone(), true);
         // Same tag, same *length*, different specs: the pre-fingerprint
         // cache served `a` here. Now the fingerprint mismatch forces a
         // recompute of the right functions.
-        let b = coord.profiles("s", &second, opt, false);
+        let b = coord.profiles("s", &second, opt.clone(), false);
         assert_eq!(b.len(), 2);
         assert_ne!(a[0].code, b[0].code);
         assert_eq!(b[0].code, second[0].id.code());
@@ -482,7 +532,7 @@ mod tests {
         let fp = sweep_fingerprint(&specs, &opt);
 
         // Baseline, computed without any persistence in the way.
-        let clean = Coordinator::new(&dir, 2).profiles("base", &specs, opt, true);
+        let clean = Coordinator::new(&dir, 2).profiles("base", &specs, opt.clone(), true);
         assert_eq!(clean.len(), 3);
 
         // Emulate a sweep killed after two functions: a checkpoint with

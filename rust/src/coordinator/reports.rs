@@ -8,7 +8,7 @@ use crate::methodology::cluster;
 use crate::methodology::step3::FunctionProfile;
 use crate::sim::accel::{self, AccelConfig};
 use crate::sim::engine::{simulate_opt, SimOptions};
-use crate::sim::{simulate, CoreModel, SystemConfig, SystemKind, CORE_SWEEP};
+use crate::sim::{simulate, CoreModel, SystemConfig, CORE_SWEEP};
 use crate::util::stats::{geomean, Summary};
 use crate::util::table::{bar, f, Table};
 use crate::workloads::{registry, Scale};
@@ -31,6 +31,19 @@ pub const FIG5_FUNCTIONS: [(&str, &str); 12] = [
 
 fn by_code<'a>(profiles: &'a [FunctionProfile], code: &str) -> Option<&'a FunctionProfile> {
     profiles.iter().find(|p| p.code == code)
+}
+
+/// Distinct system labels of a profile, in first-appearance (sweep)
+/// order — the row grouping of the per-system report tables. Custom
+/// `--systems` sweeps show up here under their own spec names.
+fn system_labels(p: &FunctionProfile) -> Vec<&str> {
+    let mut out: Vec<&str> = Vec::new();
+    for r in &p.runs {
+        if !out.contains(&r.system.as_str()) {
+            out.push(r.system.as_str());
+        }
+    }
+    out
 }
 
 const OOO: CoreModel = CoreModel::OutOfOrder;
@@ -218,9 +231,9 @@ pub fn fig5(reps: &[FunctionProfile]) -> String {
         for &c in CORE_SWEEP.iter() {
             t.row(vec![
                 c.to_string(),
-                f(p.norm_perf(SystemKind::Host, OOO, c)),
-                f(p.norm_perf(SystemKind::HostPrefetch, OOO, c)),
-                f(p.norm_perf(SystemKind::Ndp, OOO, c)),
+                f(p.norm_perf("host", OOO, c)),
+                f(p.norm_perf("host+pf", OOO, c)),
+                f(p.norm_perf("ndp", OOO, c)),
                 f(p.ndp_speedup(OOO, c)),
             ]);
         }
@@ -242,7 +255,7 @@ pub fn fig6(reps: &[FunctionProfile]) -> String {
             &["cores", "IPC", "BW (GB/s)", "utilization"],
         );
         for &c in CORE_SWEEP.iter() {
-            if let Some(r) = p.run(SystemKind::Host, OOO, c) {
+            if let Some(r) = p.run("host", OOO, c) {
                 t.row(vec![
                     c.to_string(),
                     f(r.result.ipc),
@@ -270,12 +283,12 @@ pub fn fig_energy(reps: &[FunctionProfile], fig: &str, codes: [&str; 2], class: 
             &["cores", "system", "L1", "L2", "L3", "DRAM", "link", "total"],
         );
         for &c in CORE_SWEEP.iter() {
-            for kind in [SystemKind::Host, SystemKind::Ndp] {
-                if let Some(r) = p.run(kind, OOO, c) {
+            for sys in system_labels(p) {
+                if let Some(r) = p.run(sys, OOO, c) {
                     let e = r.result.energy;
                     t.row(vec![
                         c.to_string(),
-                        kind.label().into(),
+                        sys.into(),
                         f(e.l1),
                         f(e.l2),
                         f(e.l3),
@@ -287,19 +300,22 @@ pub fn fig_energy(reps: &[FunctionProfile], fig: &str, codes: [&str; 2], class: 
             }
         }
         out.push_str(&t.render());
-        // Summary ratio.
+        // Summary ratio (when the sweep includes both paper presets).
         let ratios: Vec<f64> = CORE_SWEEP
             .iter()
             .filter_map(|&c| {
-                let h = p.run(SystemKind::Host, OOO, c)?.result.energy.total();
-                let n = p.run(SystemKind::Ndp, OOO, c)?.result.energy.total();
+                let h = p.run("host", OOO, c)?.result.energy.total();
+                let n = p.run("ndp", OOO, c)?.result.energy.total();
                 Some(h / n)
             })
             .collect();
-        out.push_str(&format!(
-            "mean host/NDP energy ratio across core counts: {:.2}x\n\n",
-            geomean(&ratios)
-        ));
+        if !ratios.is_empty() {
+            out.push_str(&format!(
+                "mean host/NDP energy ratio across core counts: {:.2}x\n",
+                geomean(&ratios)
+            ));
+        }
+        out.push('\n');
     }
     out
 }
@@ -316,12 +332,12 @@ pub fn fig_amat(reps: &[FunctionProfile], fig: &str, codes: [&str; 2], class: &s
             &["cores", "system", "L1", "L2", "L3", "DRAM", "AMAT"],
         );
         for &c in CORE_SWEEP.iter() {
-            for kind in [SystemKind::Host, SystemKind::Ndp] {
-                if let Some(r) = p.run(kind, OOO, c) {
+            for sys in system_labels(p) {
+                if let Some(r) = p.run(sys, OOO, c) {
                     let a = r.result.amat_parts;
                     t.row(vec![
                         c.to_string(),
-                        kind.label().into(),
+                        sys.into(),
                         f(a[0]),
                         f(a[1]),
                         f(a[2]),
@@ -349,7 +365,7 @@ pub fn fig11(reps: &[FunctionProfile]) -> String {
             &["cores", "L1", "L2", "L3", "DRAM", "ctrl-utilization"],
         );
         for &c in CORE_SWEEP.iter() {
-            if let Some(r) = p.run(SystemKind::Host, OOO, c) {
+            if let Some(r) = p.run("host", OOO, c) {
                 let fr = r.result.level_fracs;
                 t.row(vec![
                     c.to_string(),
@@ -375,7 +391,7 @@ pub fn fig16(reps: &[FunctionProfile]) -> String {
     let mut out = String::new();
     for (code, class) in FIG5_FUNCTIONS {
         let Some(p) = by_code(reps, code) else { continue };
-        if p.run(SystemKind::HostNuca, OOO, 1).is_none() {
+        if p.run("host-nuca", OOO, 1).is_none() {
             continue;
         }
         let mut t = Table::new(
@@ -385,9 +401,9 @@ pub fn fig16(reps: &[FunctionProfile]) -> String {
         for &c in CORE_SWEEP.iter() {
             t.row(vec![
                 c.to_string(),
-                f(p.norm_perf(SystemKind::Host, OOO, c)),
-                f(p.norm_perf(SystemKind::HostNuca, OOO, c)),
-                f(p.norm_perf(SystemKind::Ndp, OOO, c)),
+                f(p.norm_perf("host", OOO, c)),
+                f(p.norm_perf("host-nuca", OOO, c)),
+                f(p.norm_perf("ndp", OOO, c)),
             ]);
         }
         out.push_str(&t.render());
@@ -401,7 +417,7 @@ pub fn fig17(reps: &[FunctionProfile]) -> String {
     let mut out = String::new();
     for (code, class) in FIG5_FUNCTIONS {
         let Some(p) = by_code(reps, code) else { continue };
-        if p.run(SystemKind::HostNuca, OOO, 1).is_none() {
+        if p.run("host-nuca", OOO, 1).is_none() {
             continue;
         }
         let mut t = Table::new(
@@ -409,16 +425,16 @@ pub fn fig17(reps: &[FunctionProfile]) -> String {
             &["cores", "host-8MB", "host-NUCA", "ndp"],
         );
         for &c in CORE_SWEEP.iter() {
-            let e = |k: SystemKind| {
-                p.run(k, OOO, c)
+            let e = |sys: &str| {
+                p.run(sys, OOO, c)
                     .map(|r| r.result.energy.total())
                     .unwrap_or(f64::NAN)
             };
             t.row(vec![
                 c.to_string(),
-                f(e(SystemKind::Host)),
-                f(e(SystemKind::HostNuca)),
-                f(e(SystemKind::Ndp)),
+                f(e("host")),
+                f(e("host-nuca")),
+                f(e("ndp")),
             ]);
         }
         out.push_str(&t.render());
@@ -657,7 +673,7 @@ pub fn fig24_25(reps: &[FunctionProfile]) -> String {
         ("DRKRes", "bb covers most misses"),
     ] {
         let Some(p) = by_code(reps, code) else { continue };
-        let Some(r) = p.run(SystemKind::Host, OOO, 4) else { continue };
+        let Some(r) = p.run("host", OOO, 4) else { continue };
         let bb = &r.result.bb_llc_misses;
         let total: u64 = bb.iter().sum();
         let n_bbs = bb.iter().filter(|&&c| c > 0).count();

@@ -28,7 +28,7 @@
 use crate::methodology::locality::LocalityMetrics;
 use crate::methodology::step3::{FunctionProfile, Run};
 use crate::sim::engine::SimResult;
-use crate::sim::{CoreModel, SystemKind};
+use crate::sim::CoreModel;
 use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::telemetry::{self, metrics};
@@ -39,39 +39,25 @@ use std::sync::Mutex;
 /// Version of the persisted document schema, written into every new
 /// header. Bump on any change to the document structure. v3 added
 /// *retryable* failure lines to checkpoints
-/// ([`CheckpointWriter::append_retryable`]); the profile-record layout
-/// itself is unchanged, so loaders accept v2 and v3 alike (see
-/// [`schema_compatible`]) and `--resume` picks up a v2 checkpoint
-/// seamlessly.
-pub const SCHEMA_VERSION: u64 = 3;
+/// ([`CheckpointWriter::append_retryable`]); v4 switched run records
+/// from the closed system-kind enum to open spec names (the `"kind"`
+/// key is retained and the four preset labels are byte-identical, so
+/// v2/v3 documents still load — see [`schema_compatible`]) and folded
+/// the per-spec fingerprint into the sweep fingerprint.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Version of the per-profile record layout, part of the sweep
 /// fingerprint (see `coordinator::sweep_fingerprint`). Unchanged since
-/// schema v2 — v3 only added new line kinds — so fingerprints (and with
-/// them caches and checkpoints) remain stable across the v2→v3 bump.
-/// Bump this, not just [`SCHEMA_VERSION`], when the record layout
-/// itself changes.
+/// schema v2 — v3 only added new line kinds, v4 only widened the set of
+/// accepted `"kind"` values — so fingerprints (and with them caches and
+/// checkpoints) remain stable across the v2→v4 bumps. Bump this, not
+/// just [`SCHEMA_VERSION`], when the record layout itself changes.
 pub const RECORD_VERSION: u64 = 2;
 
-/// Document versions this build can read: v2 (profiles + metrics lines)
-/// and v3 (adds retryable lines, which v2-era readers would simply have
-/// treated as a torn tail).
+/// Document versions this build can read: v2 (profiles + metrics
+/// lines), v3 (adds retryable lines) and v4 (open system names).
 fn schema_compatible(schema: u64) -> bool {
-    schema == 2 || schema == SCHEMA_VERSION
-}
-
-fn kind_label(k: SystemKind) -> &'static str {
-    k.label()
-}
-
-fn kind_parse(s: &str) -> Option<SystemKind> {
-    match s {
-        "host" => Some(SystemKind::Host),
-        "host+pf" => Some(SystemKind::HostPrefetch),
-        "ndp" => Some(SystemKind::Ndp),
-        "host-nuca" => Some(SystemKind::HostNuca),
-        _ => None,
-    }
+    (2..=SCHEMA_VERSION).contains(&schema)
 }
 
 fn model_label(m: CoreModel) -> &'static str {
@@ -158,7 +144,7 @@ fn sim_to_json(r: &SimResult) -> Json {
     j
 }
 
-fn sim_from_json(kind: SystemKind, core_model: CoreModel, cores: usize, j: &Json) -> SimResult {
+fn sim_from_json(system: String, core_model: CoreModel, cores: usize, j: &Json) -> SimResult {
     let mut bb = vec![0u64; 256];
     if let Some(pairs) = j.get("bb_llc").and_then(Json::as_arr) {
         for p in pairs {
@@ -180,7 +166,7 @@ fn sim_from_json(kind: SystemKind, core_model: CoreModel, cores: usize, j: &Json
         out
     };
     SimResult {
-        kind,
+        system,
         core_model,
         cores,
         time_s: f64s(j, "time_s"),
@@ -246,7 +232,10 @@ pub fn profile_to_json(p: &FunctionProfile) -> Json {
                     .iter()
                     .map(|r| {
                         let mut jr = Json::obj();
-                        jr.set("kind", kind_label(r.kind))
+                        // The JSON key stays `"kind"` for byte-compat
+                        // with v2/v3 documents; the value is the open
+                        // spec name ("host", "ndp", custom names, ...).
+                        jr.set("kind", r.system.as_str())
                             .set("model", model_label(r.core_model))
                             .set("cores", r.cores)
                             .set("result", sim_to_json(&r.result));
@@ -271,12 +260,15 @@ pub fn profile_from_json(j: &Json) -> Option<FunctionProfile> {
         .as_arr()?
         .iter()
         .filter_map(|jr| {
-            let kind = kind_parse(jr.get("kind")?.as_str()?)?;
+            let system = jr.get("kind")?.as_str()?.to_string();
+            if system.is_empty() {
+                return None;
+            }
             let model = model_parse(jr.get("model")?.as_str()?)?;
             let cores = jr.get("cores")?.as_f64()? as usize;
-            let result = sim_from_json(kind, model, cores, jr.get("result")?);
+            let result = sim_from_json(system.clone(), model, cores, jr.get("result")?);
             Some(Run {
-                kind,
+                system,
                 core_model: model,
                 cores,
                 result,

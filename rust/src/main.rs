@@ -9,9 +9,13 @@
 //!   damov validate                      §3.5 two-phase validation
 //!   damov bench [...]                   time the sweep phases serial vs
 //!                                       parallel, emit BENCH_sweep.json
+//!   damov systems [name]                list system presets / dump one
+//!                                       as spec JSON (docs/systems.md)
 //!
 //! Common options: --threads N, --scale X, --refresh, --results DIR,
-//! --cores N, --system host|host+pf|ndp|host-nuca, --inorder.
+//! --cores N, --system <preset|file.json>, --inorder. Sweep commands
+//! also take --systems a,b,c — a comma-separated list of presets and/or
+//! spec-JSON paths to sweep instead of the paper's four systems.
 //!
 //! Robustness options (sweep commands):
 //!   --resume            resume an interrupted sweep from its checkpoint
@@ -51,7 +55,7 @@ use damov::methodology::step3::{
     SweepOptions,
 };
 use damov::runtime::{artifact, Analytics};
-use damov::sim::{simulate, CoreModel, SystemConfig, SystemKind};
+use damov::sim::{simulate, CoreModel, SystemSpec};
 use damov::util::cli::Args;
 use damov::util::json::Json;
 use damov::util::pool::{self, default_threads};
@@ -64,6 +68,7 @@ fn main() {
         std::env::args().skip(1),
         &["refresh", "inorder", "no-artifacts", "resume"],
     );
+    validate_cli(&args);
     match args.command.as_deref() {
         Some("list") => cmd_list(),
         Some("config") => print!("{}", reports::tab1()),
@@ -73,6 +78,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("validate") => cmd_report_named(&args, &["validation"]),
         Some("bench") => cmd_bench(&args),
+        Some("systems") => cmd_systems(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -86,12 +92,70 @@ fn main() {
     telemetry::flush();
 }
 
+/// Per-command allow-lists for options and flags: a typo'd `--scael` or
+/// `--verbose` is a usage error (status 2) with a hint, never silently
+/// ignored.
+fn validate_cli(args: &Args) {
+    let (opts, flags): (&[&str], &[&str]) = match args.command.as_deref() {
+        Some("list") | Some("config") => (&[], &[]),
+        Some("sim") => (&["code", "cores", "scale", "system"], &["inorder"]),
+        Some("characterize") => (&["code", "scale"], &["no-artifacts", "inorder"]),
+        Some("step1") => (&["scale", "threads"], &[]),
+        Some("report") | Some("validate") => (
+            &[
+                "threads",
+                "scale",
+                "results",
+                "limit",
+                "max-retries",
+                "job-timeout",
+                "sweep-deadline",
+                "systems",
+            ],
+            &["refresh", "resume", "no-artifacts"],
+        ),
+        Some("bench") => (
+            &["scale", "threads", "limit", "out", "check", "baseline-out"],
+            &[],
+        ),
+        Some("systems") => (&["out"], &[]),
+        _ => return, // unknown command / no command: handled in main()
+    };
+    let cmd = args.command.as_deref().unwrap_or("");
+    let mut bad = Vec::new();
+    for k in args.options.keys() {
+        if !opts.contains(&k.as_str()) {
+            bad.push(k.clone());
+        }
+    }
+    for fl in &args.flags {
+        if !opts.contains(&fl.as_str()) && !flags.contains(&fl.as_str()) {
+            bad.push(fl.clone());
+        }
+    }
+    if !bad.is_empty() {
+        for b in &bad {
+            eprintln!("unknown option --{b} for `damov {cmd}`");
+        }
+        let mut supported: Vec<&str> = opts.iter().chain(flags.iter()).copied().collect();
+        supported.sort_unstable();
+        if supported.is_empty() {
+            eprintln!("`damov {cmd}` takes no options");
+        } else {
+            eprintln!("supported options for `damov {cmd}`: --{}", supported.join(" --"));
+        }
+        std::process::exit(2);
+    }
+}
+
 fn usage() {
     eprintln!(
-        "usage: damov <list|config|sim|step1|characterize|report|validate|bench> [options]\n\
+        "usage: damov <list|config|sim|step1|characterize|report|validate|bench|systems> [options]\n\
          common: --threads N --scale X --refresh --results DIR\n\
          bench: damov bench [--scale tiny|full|X] [--limit N] [--out BENCH_sweep.json]\n\
-         \x20      [--check rust/tests/golden/bench-baseline.json] (docs/performance.md)\n\
+         \x20      [--check rust/tests/golden/bench-baseline.json] [--baseline-out FILE] (docs/performance.md)\n\
+         systems: damov systems [list|<preset>] [--out FILE] (dump a spec as JSON; docs/systems.md)\n\
+         \x20        report/validate take --systems <preset|spec.json>,... to sweep custom systems\n\
          robustness: --resume (continue an interrupted sweep from its checkpoint)\n\
          \x20           --max-retries N (retries per panicking worker job, default 2)\n\
          \x20           --job-timeout D (soft-cancel any job running longer than D, e.g. 2s)\n\
@@ -120,15 +184,83 @@ fn cmd_list() {
     }
 }
 
-fn parse_system(s: &str) -> SystemKind {
-    match s {
-        "host" => SystemKind::Host,
-        "host+pf" | "pf" => SystemKind::HostPrefetch,
-        "ndp" => SystemKind::Ndp,
-        "host-nuca" | "nuca" => SystemKind::HostNuca,
-        other => {
-            eprintln!("unknown system {other:?} (host|host+pf|ndp|host-nuca)");
+/// Resolve one `--system`/`--systems` entry — a preset name or a path
+/// to a spec-JSON file — or exit with a usage error (status 2).
+fn resolve_system(arg: &str) -> SystemSpec {
+    SystemSpec::resolve(arg).unwrap_or_else(|e| {
+        eprintln!("invalid system {arg:?}: {e}");
+        eprintln!(
+            "presets: host, host+pf, ndp, host-nuca; or a path to a spec JSON \
+             (see `damov systems` and docs/systems.md)"
+        );
+        std::process::exit(2);
+    })
+}
+
+/// Parse `--systems a,b,c` into an ordered spec list (the first entry
+/// is the normalization baseline). `None` when the flag is absent.
+fn systems_flag(args: &Args) -> Option<Vec<SystemSpec>> {
+    args.opt("systems").map(|list| {
+        let specs: Vec<SystemSpec> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(resolve_system)
+            .collect();
+        if specs.is_empty() {
+            eprintln!("--systems expects a comma-separated list of presets or spec-JSON paths");
             std::process::exit(2);
+        }
+        for (i, a) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|b| b.name == a.name) {
+                eprintln!("--systems lists {:?} twice (spec names must be unique)", a.name);
+                std::process::exit(2);
+            }
+        }
+        specs
+    })
+}
+
+/// `damov systems [name]`: list the built-in presets, or dump one
+/// preset / custom spec as normalized spec JSON (stdout, or --out FILE).
+fn cmd_systems(args: &Args) {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            println!("{:10} {:34} {}", "name", "hierarchy", "backend");
+            for s in SystemSpec::presets() {
+                let caches: Vec<String> = s
+                    .caches
+                    .iter()
+                    .enumerate()
+                    .map(|(i, l)| {
+                        format!(
+                            "L{}:{}KiB{}",
+                            i + 1,
+                            l.size_bytes >> 10,
+                            if l.shared { "(shared)" } else { "" }
+                        )
+                    })
+                    .collect();
+                println!("{:10} {:34} {}", s.name, caches.join(" "), s.backend.label());
+            }
+            println!(
+                "\n`damov systems <name>` dumps a preset as spec JSON (--out FILE to save);\n\
+                 custom specs run with --system/--systems <file.json> (docs/systems.md)"
+            );
+        }
+        Some(name) => {
+            let spec = resolve_system(name);
+            let text = spec.to_json().to_string_pretty();
+            match args.opt("out") {
+                Some(path) => {
+                    if let Err(e) = std::fs::write(path, format!("{text}\n")) {
+                        eprintln!("could not write {path:?}: {e}");
+                        std::process::exit(1);
+                    }
+                    eprintln!("wrote {path}");
+                }
+                None => println!("{text}"),
+            }
         }
     }
 }
@@ -146,8 +278,8 @@ fn cmd_sim(args: &Args) {
     } else {
         CoreModel::OutOfOrder
     };
-    let kind = parse_system(args.opt_or("system", "host"));
-    let cfg = SystemConfig::by_kind(kind, cores, model);
+    let sys = resolve_system(args.opt_or("system", "host"));
+    let cfg = sys.build(cores, model);
     let trace = spec.trace(cores, scale);
     let accesses: usize = trace.iter().map(Vec::len).sum();
     let t0 = std::time::Instant::now();
@@ -155,7 +287,7 @@ fn cmd_sim(args: &Args) {
     let wall = t0.elapsed();
     println!(
         "{code} on {} x{cores} ({model:?}): {accesses} accesses in {:.2?} ({:.1} M acc/s)",
-        kind.label(),
+        cfg.label,
         wall,
         accesses as f64 / wall.as_secs_f64() / 1e6
     );
@@ -270,9 +402,9 @@ fn cmd_characterize(args: &Args) {
         println!(
             "  {:>3} cores: host {:>8.1}  host+pf {:>8.1}  ndp {:>8.1}  (ndp/host {:.2})",
             c,
-            profile.norm_perf(SystemKind::Host, CoreModel::OutOfOrder, c),
-            profile.norm_perf(SystemKind::HostPrefetch, CoreModel::OutOfOrder, c),
-            profile.norm_perf(SystemKind::Ndp, CoreModel::OutOfOrder, c),
+            profile.norm_perf("host", CoreModel::OutOfOrder, c),
+            profile.norm_perf("host+pf", CoreModel::OutOfOrder, c),
+            profile.norm_perf("ndp", CoreModel::OutOfOrder, c),
             profile.ndp_speedup(CoreModel::OutOfOrder, c),
         );
     }
@@ -310,6 +442,19 @@ const ALL_REPORTS: [&str; 27] = [
 
 fn cmd_report(args: &Args) {
     let mut wanted: Vec<String> = args.positional.clone();
+    // Validate every requested name *before* any (potentially
+    // hours-long) sweep starts, and exit non-zero on a typo.
+    let known = |w: &str| {
+        ALL_REPORTS.contains(&w) || matches!(w, "all" | "fig21" | "fig25" | "val")
+    };
+    let bad: Vec<&String> = wanted.iter().filter(|w| !known(w)).collect();
+    if !bad.is_empty() {
+        for b in &bad {
+            eprintln!("unknown report {b:?}");
+        }
+        eprintln!("known reports: all {}", ALL_REPORTS.join(" "));
+        std::process::exit(2);
+    }
     if wanted.is_empty() || wanted.iter().any(|w| w == "all") {
         wanted = ALL_REPORTS.iter().map(|s| s.to_string()).collect();
     }
@@ -363,6 +508,8 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
         0 => None,
         n => Some(n),
     };
+    // `--systems a,b,c` sweeps custom specs instead of the paper's four.
+    let systems = systems_flag(args);
 
     let needs_reps = wanted
         .iter()
@@ -379,7 +526,12 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
                 "profiling {n} representatives ({threads} threads)..."
             )))],
         );
-        coord.representative_profiles_scaled(refresh, scale, limit)
+        match &systems {
+            Some(sys) => {
+                coord.representative_profiles_systems(refresh, scale, limit, sys.clone())
+            }
+            None => coord.representative_profiles_scaled(refresh, scale, limit),
+        }
     } else {
         Vec::new()
     };
@@ -435,17 +587,22 @@ fn cmd_report_named(args: &Args, wanted: &[&str]) {
             "tab8" => reports::tab8(&reps, &holdout),
             "validation" | "val" => reports::validation(&reps, &holdout),
             "health" => {
-                let (expected, _) = Coordinator::representative_sweep(scale, limit);
+                let sys = systems.clone().unwrap_or_else(SystemSpec::paper_sweep);
+                let (expected, _) =
+                    Coordinator::representative_sweep_systems(scale, limit, sys.clone());
                 reports::sweep_health(
                     &expected,
                     &reps,
-                    &coord.representative_retryable(scale, limit),
+                    &coord.representative_retryable_systems(scale, limit, sys),
                 )
             }
             "telemetry" => reports::telemetry_report(),
             other => {
+                // Unreachable via `damov report` (names are validated up
+                // front), but a direct caller still gets a hard error.
                 eprintln!("unknown report {other:?}");
-                continue;
+                eprintln!("known reports: all {}", ALL_REPORTS.join(" "));
+                std::process::exit(2);
             }
         };
         println!("{text}");
@@ -576,7 +733,7 @@ fn cmd_bench(args: &Args) {
     // time on this thread, one config point at a time.
     let serial = BenchPass::run(|| {
         for s in &specs {
-            std::hint::black_box(profile_function_tuned(s, opt, ReplayParallelism::Serial));
+            std::hint::black_box(profile_function_tuned(s, opt.clone(), ReplayParallelism::Serial));
         }
     });
     // Fast path: the production scheduler — functions fan out over the
@@ -619,6 +776,21 @@ fn cmd_bench(args: &Args) {
         std::process::exit(1);
     }
     eprintln!("bench: wrote {out_path}");
+
+    // Record a machine-local baseline that later runs gate against with
+    // `--check`: pins the parallel replay wall plus the regression budget.
+    if let Some(baseline_path) = args.opt("baseline-out") {
+        let mut base = Json::obj();
+        base.set("schema", 1u64)
+            .set("min_replay_speedup", 2.0)
+            .set("replay_wall_s", parallel.replay_wall_s())
+            .set("max_regression", 1.10);
+        if let Err(e) = std::fs::write(baseline_path, base.to_string_pretty()) {
+            eprintln!("could not write {baseline_path:?}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("bench: wrote baseline {baseline_path}");
+    }
 
     if let Some(baseline_path) = args.opt("check") {
         let base = std::fs::read_to_string(baseline_path)

@@ -1,16 +1,15 @@
 //! Step 3: scalability analysis (paper §2.4).
 //!
-//! For each function we simulate the three system configurations (host,
-//! host+prefetcher, NDP) across the 1–256 core sweep (and optionally the
-//! §3.4 NUCA host and the in-order core model), and collect the
-//! classification metrics — AI, LLC MPKI, LFMR (+ its slope over the
-//! sweep) — plus everything the report harness needs (energy breakdowns,
-//! AMAT, request breakdowns, bandwidth, NoC statistics).
+//! For each function we simulate a configurable list of
+//! [`SystemSpec`]s (by default the paper's host, host+prefetcher and
+//! NDP; optionally the §3.4 NUCA host and custom JSON specs) across the
+//! 1–256 core sweep (and optionally the in-order core model), and
+//! collect the classification metrics — AI, LLC MPKI, LFMR (+ its slope
+//! over the sweep) — plus everything the report harness needs (energy
+//! breakdowns, AMAT, request breakdowns, bandwidth, NoC statistics).
 
 use super::locality::{locality, LocalityMetrics};
-use crate::sim::{
-    simulate_events, CoreModel, SimResult, SystemConfig, SystemKind, TraceAnalysis, CORE_SWEEP,
-};
+use crate::sim::{simulate_events, CoreModel, SimResult, SystemSpec, TraceAnalysis, CORE_SWEEP};
 use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::pool::{self, par_map_catch_opts, JobErrorKind, PoolOptions};
@@ -42,7 +41,8 @@ pub fn profile_call_count() -> u64 {
 /// One simulated (system, core-model, cores) point.
 #[derive(Debug, Clone)]
 pub struct Run {
-    pub kind: SystemKind,
+    /// Name of the [`SystemSpec`] this point was lowered from.
+    pub system: String,
     pub core_model: CoreModel,
     pub cores: usize,
     pub result: SimResult,
@@ -69,31 +69,34 @@ pub struct FunctionProfile {
 }
 
 impl FunctionProfile {
-    pub fn run(&self, kind: SystemKind, core_model: CoreModel, cores: usize) -> Option<&Run> {
+    pub fn run(&self, system: &str, core_model: CoreModel, cores: usize) -> Option<&Run> {
         self.runs
             .iter()
-            .find(|r| r.kind == kind && r.core_model == core_model && r.cores == cores)
+            .find(|r| r.system == system && r.core_model == core_model && r.cores == cores)
     }
 
-    /// Performance normalized to one host core (same core model).
-    pub fn norm_perf(&self, kind: SystemKind, core_model: CoreModel, cores: usize) -> f64 {
+    /// Name of the baseline system: the first system of the sweep this
+    /// profile was produced by ("host" for the paper presets).
+    pub fn baseline_system(&self) -> &str {
+        self.runs.first().map(|r| r.system.as_str()).unwrap_or("")
+    }
+
+    /// Performance normalized to one baseline-system core (same model).
+    pub fn norm_perf(&self, system: &str, core_model: CoreModel, cores: usize) -> f64 {
         let base = self
-            .run(SystemKind::Host, core_model, 1)
+            .run(self.baseline_system(), core_model, 1)
             .map(|r| r.result.perf())
             .unwrap_or(1.0);
-        self.run(kind, core_model, cores)
+        self.run(system, core_model, cores)
             .map(|r| r.result.perf() / base)
             .unwrap_or(f64::NAN)
     }
 
-    /// NDP speedup over the host at the same core count.
+    /// NDP speedup over the host at the same core count (NaN when the
+    /// sweep did not include both paper presets).
     pub fn ndp_speedup(&self, core_model: CoreModel, cores: usize) -> f64 {
-        let host = self
-            .run(SystemKind::Host, core_model, cores)
-            .map(|r| r.result.perf());
-        let ndp = self
-            .run(SystemKind::Ndp, core_model, cores)
-            .map(|r| r.result.perf());
+        let host = self.run("host", core_model, cores).map(|r| r.result.perf());
+        let ndp = self.run("ndp", core_model, cores).map(|r| r.result.perf());
         match (host, ndp) {
             (Some(h), Some(n)) if h > 0.0 => n / h,
             _ => f64::NAN,
@@ -118,11 +121,12 @@ impl FunctionProfile {
 }
 
 /// What to simulate for a profile.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SweepOptions {
     pub core_models: &'static [CoreModel],
-    /// Include the §3.4 NUCA host configuration.
-    pub nuca: bool,
+    /// Ordered list of system specs to sweep; the first is the
+    /// normalization baseline ("host" for the paper presets).
+    pub systems: Vec<SystemSpec>,
     pub scale: Scale,
 }
 
@@ -130,7 +134,7 @@ impl Default for SweepOptions {
     fn default() -> Self {
         SweepOptions {
             core_models: &[CoreModel::OutOfOrder],
-            nuca: false,
+            systems: SystemSpec::default_sweep(),
             scale: Scale(1.0),
         }
     }
@@ -166,6 +170,10 @@ pub fn profile_function_tuned(
     opt: SweepOptions,
     par: ReplayParallelism,
 ) -> FunctionProfile {
+    assert!(
+        !opt.systems.is_empty(),
+        "SweepOptions.systems must contain at least one SystemSpec"
+    );
     metrics::counter("sweep.functions_profiled").incr();
     let _span = telemetry::span_args(
         "profile",
@@ -178,18 +186,14 @@ pub fn profile_function_tuned(
     fault::maybe_panic("sim", fault_key);
     fault::maybe_hang("sim", fault_key);
     let loc = locality(&spec.locality_trace(opt.scale));
-    let mut kinds = vec![SystemKind::Host, SystemKind::HostPrefetch, SystemKind::Ndp];
-    if opt.nuca {
-        kinds.push(SystemKind::HostNuca);
-    }
-    // The (model, kind) grid in the exact order of the historical serial
-    // nested loop, so `runs` keeps its byte-identical order under
+    // The (model, system) grid in the exact order of the historical
+    // serial nested loop, so `runs` keeps its byte-identical order under
     // parallel replay (par_map_extra preserves input order).
-    let mut points: Vec<(CoreModel, SystemKind)> =
-        Vec::with_capacity(opt.core_models.len() * kinds.len());
+    let mut points: Vec<(CoreModel, usize)> =
+        Vec::with_capacity(opt.core_models.len() * opt.systems.len());
     for &model in opt.core_models {
-        for &kind in &kinds {
-            points.push((model, kind));
+        for si in 0..opt.systems.len() {
+            points.push((model, si));
         }
     }
 
@@ -212,8 +216,8 @@ pub fn profile_function_tuned(
         let analysis = TraceAnalysis::new(&trace);
         // The SoA buffer is the only copy kept during replay.
         drop(trace);
-        let replay_point = |&(model, kind): &(CoreModel, SystemKind)| -> SimResult {
-            simulate_events(&SystemConfig::by_kind(kind, cores, model), &analysis.events)
+        let replay_point = |&(model, si): &(CoreModel, usize)| -> SimResult {
+            simulate_events(&opt.systems[si].build(cores, model), &analysis.events)
         };
         let results: Vec<SimResult> = match par {
             ReplayParallelism::Serial => points.iter().map(replay_point).collect(),
@@ -224,9 +228,9 @@ pub fn profile_function_tuned(
             }
             ReplayParallelism::Extra(extra) => pool::par_map_extra(&points, extra, replay_point),
         };
-        for (&(model, kind), result) in points.iter().zip(results) {
+        for (&(model, si), result) in points.iter().zip(results) {
             runs.push(Run {
-                kind,
+                system: opt.systems[si].name.clone(),
                 core_model: model,
                 cores,
                 result,
@@ -234,19 +238,18 @@ pub fn profile_function_tuned(
         }
     }
 
+    let base = opt.systems[0].name.as_str();
     let refrun = runs
         .iter()
-        .find(|r| {
-            r.kind == SystemKind::Host && r.core_model == CoreModel::OutOfOrder && r.cores == 4
-        })
-        .or_else(|| runs.iter().find(|r| r.kind == SystemKind::Host && r.cores == 4))
-        .expect("host@4 reference run");
+        .find(|r| r.system == base && r.core_model == CoreModel::OutOfOrder && r.cores == 4)
+        .or_else(|| runs.iter().find(|r| r.system == base && r.cores == 4))
+        .expect("baseline@4 reference run");
     let lfmr_by_cores: Vec<f64> = CORE_SWEEP
         .iter()
         .filter_map(|&c| {
             runs.iter()
                 .find(|r| {
-                    r.kind == SystemKind::Host && r.core_model == opt.core_models[0] && r.cores == c
+                    r.system == base && r.core_model == opt.core_models[0] && r.cores == c
                 })
                 .map(|r| r.result.lfmr)
         })
@@ -331,7 +334,7 @@ where
     C: Fn(&FunctionProfile) + Sync,
 {
     par_map_catch_opts(specs, pool, |s| {
-        let p = profile_function(s, opt);
+        let p = profile_function(s, opt.clone());
         on_complete(&p);
         p
     })
@@ -424,13 +427,14 @@ mod tests {
         // 3 systems x 5 core counts.
         assert_eq!(p.runs.len(), 15);
         assert_eq!(p.lfmr_by_cores.len(), 5);
-        assert!(p.run(SystemKind::Ndp, CoreModel::OutOfOrder, 256).is_some());
+        assert!(p.run("ndp", CoreModel::OutOfOrder, 256).is_some());
     }
 
     #[test]
     fn norm_perf_baseline_is_one() {
         let p = tiny_profile("STRCpy");
-        let base = p.norm_perf(SystemKind::Host, CoreModel::OutOfOrder, 1);
+        assert_eq!(p.baseline_system(), "host");
+        let base = p.norm_perf("host", CoreModel::OutOfOrder, 1);
         assert!((base - 1.0).abs() < 1e-12);
     }
 }

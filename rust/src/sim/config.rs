@@ -1,17 +1,24 @@
-//! System configurations (paper Table 1).
+//! Lowered system configurations (paper Table 1).
 //!
-//! Three primary systems are simulated, differing **only** in the memory
-//! hierarchy so that performance/energy deltas isolate data movement:
+//! [`SystemConfig`] is what the engine replays against: a fully resolved
+//! set of core/cache/memory parameters. It is *lowered* from the
+//! declarative [`SystemSpec`](crate::sim::spec::SystemSpec) layer — the
+//! engine never branches on which named system it is running, only on
+//! structural facts (which cache slots exist, the memory backend, the
+//! L1 write policy).
 //!
-//! * **Host CPU** — private L1 (32 KiB) + L2 (256 KiB), shared inclusive
+//! The paper's systems, available as spec presets, differ **only** in
+//! the memory hierarchy so that performance/energy deltas isolate data
+//! movement:
+//!
+//! * **host** — private L1 (32 KiB) + L2 (256 KiB), shared inclusive
 //!   L3 (8 MiB, 16 banks), off-chip HMC link.
-//! * **Host CPU + prefetcher** — same, plus an L2 stream prefetcher
-//!   (2-degree, 16 streams, 64 entries).
-//! * **NDP** — cores in the HMC logic layer: private read-only L1 only,
+//! * **host+pf** — same, plus an L2 stream prefetcher (2-degree,
+//!   16 streams).
+//! * **ndp** — cores in the HMC logic layer: private read-only L1 only,
 //!   no prefetcher, direct vault access (no off-chip link).
-//!
-//! Plus the §3.4 variant: **Host NUCA** — L3 scales 2 MiB/core, banks on a
-//! 2-D mesh NoC (M/D/1 contention, 3 cycles/hop).
+//! * **host-nuca** — §3.4 variant: L3 scales 2 MiB/core, banks on a
+//!   2-D mesh NoC (M/D/1 contention, 3 cycles/hop).
 
 /// Core microarchitecture model (paper §2.4.2 uses both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -22,29 +29,40 @@ pub enum CoreModel {
     InOrder,
 }
 
-/// Which of the paper's system configurations to simulate.
+/// How cores reach main memory — the structural axis that used to be
+/// implied by the `SystemKind` enum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum SystemKind {
-    Host,
-    HostPrefetch,
-    Ndp,
-    /// §3.4: host with NUCA L3 scaling 2 MiB per core over a 2-D mesh.
-    HostNuca,
+pub enum MemoryBackend {
+    /// Off-chip access over the HMC SerDes link (host CPUs).
+    HmcLink,
+    /// Logic-layer cores with direct vault access (NDP): no link
+    /// latency/energy, internal bandwidth.
+    DirectVault,
+    /// Host with the LLC distributed over a 2-D mesh NoC (§3.4 NUCA).
+    NucaMesh,
 }
 
-impl SystemKind {
+impl MemoryBackend {
     pub fn label(&self) -> &'static str {
         match self {
-            SystemKind::Host => "host",
-            SystemKind::HostPrefetch => "host+pf",
-            SystemKind::Ndp => "ndp",
-            SystemKind::HostNuca => "host-nuca",
+            MemoryBackend::HmcLink => "hmc-link",
+            MemoryBackend::DirectVault => "direct-vault",
+            MemoryBackend::NucaMesh => "nuca-mesh",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MemoryBackend> {
+        match s {
+            "hmc-link" => Some(MemoryBackend::HmcLink),
+            "direct-vault" => Some(MemoryBackend::DirectVault),
+            "nuca-mesh" => Some(MemoryBackend::NucaMesh),
+            _ => None,
         }
     }
 }
 
 /// Geometry/latency of one cache level.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CacheConfig {
     pub size_bytes: usize,
     pub ways: usize,
@@ -62,7 +80,7 @@ impl CacheConfig {
 }
 
 /// HMC v2.0-like main memory (Table 1 "Common").
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DramConfig {
     pub vaults: usize,
     pub banks_per_vault: usize,
@@ -87,8 +105,32 @@ pub struct DramConfig {
     pub epj_bit_link: f64,
 }
 
+impl Default for DramConfig {
+    fn default() -> DramConfig {
+        // Latencies in 2.4 GHz core cycles. Vault-local access ≈ 21 ns for a
+        // row hit, ≈ 42 ns with an activate; the host additionally pays the
+        // off-chip SerDes/controller round trip (≈ 40 ns). Peak bandwidths
+        // match the paper's §1 STREAM-Copy calibration (115 vs 431 GB/s).
+        DramConfig {
+            vaults: 32,
+            banks_per_vault: 8,
+            row_bytes: 256,
+            line_bytes: LINE,
+            row_hit_cycles: 50,
+            act_cycles: 50,
+            pre_act_cycles: 100,
+            host_link_cycles: 96,
+            host_peak_bw: 115.0e9,
+            ndp_peak_bw: 431.0e9,
+            epj_bit_internal: 2.0,
+            epj_bit_logic: 8.0,
+            epj_bit_link: 2.0,
+        }
+    }
+}
+
 /// NUCA / NDP-mesh NoC parameters (§3.4, §5.1).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NocConfig {
     pub cycles_per_hop: u64,
     /// Energy per request at a router / per link traversal (pJ).
@@ -96,10 +138,27 @@ pub struct NocConfig {
     pub epj_link: f64,
 }
 
-/// A complete simulated system.
-#[derive(Debug, Clone, Copy)]
+impl Default for NocConfig {
+    fn default() -> NocConfig {
+        NocConfig {
+            cycles_per_hop: 3,
+            epj_router: 63.0,
+            epj_link: 71.0,
+        }
+    }
+}
+
+/// A complete simulated system, lowered from a
+/// [`SystemSpec`](crate::sim::spec::SystemSpec) at a concrete
+/// (cores, core-model) point.
+#[derive(Debug, Clone)]
 pub struct SystemConfig {
-    pub kind: SystemKind,
+    /// Label of the spec this config was lowered from — used in
+    /// profiles, the results store and report tables.
+    pub label: String,
+    pub backend: MemoryBackend,
+    /// Stores bypass the L1 straight to memory (NDP logic-layer cores).
+    pub l1_read_only: bool,
     pub core: CoreModel,
     pub cores: usize,
     pub freq_hz: f64,
@@ -109,9 +168,9 @@ pub struct SystemConfig {
     /// Max outstanding L1 misses per core (MSHRs) — MLP ceiling.
     pub mshrs: u64,
     pub l1: CacheConfig,
-    /// None for NDP (single cache level).
+    /// Private mid-level cache, when the spec declares one.
     pub l2: Option<CacheConfig>,
-    /// None for NDP. Shared and inclusive when present.
+    /// Shared inclusive LLC, when the spec declares one.
     pub l3: Option<CacheConfig>,
     pub l3_banks: usize,
     pub prefetch: bool,
@@ -120,141 +179,47 @@ pub struct SystemConfig {
     pub pf_degree: usize,
     pub dram: DramConfig,
     pub noc: NocConfig,
-    /// NUCA: L3 is 2 MiB/core, accessed over the mesh.
-    pub nuca: bool,
 }
 
 pub const LINE: usize = 64;
 
-fn l1_cfg() -> CacheConfig {
-    CacheConfig {
-        size_bytes: 32 << 10,
-        ways: 8,
-        line_bytes: LINE,
-        latency_cycles: 4,
-        epj_hit: 15.0,
-        epj_miss: 33.0,
-    }
-}
-
-fn l2_cfg() -> CacheConfig {
-    CacheConfig {
-        size_bytes: 256 << 10,
-        ways: 8,
-        line_bytes: LINE,
-        latency_cycles: 7,
-        epj_hit: 46.0,
-        epj_miss: 93.0,
-    }
-}
-
-fn l3_cfg(size_bytes: usize) -> CacheConfig {
-    CacheConfig {
-        size_bytes,
-        ways: 16,
-        line_bytes: LINE,
-        latency_cycles: 27,
-        epj_hit: 945.0,
-        epj_miss: 1904.0,
-    }
-}
-
-fn dram_cfg() -> DramConfig {
-    // Latencies in 2.4 GHz core cycles. Vault-local access ≈ 21 ns for a
-    // row hit, ≈ 42 ns with an activate; the host additionally pays the
-    // off-chip SerDes/controller round trip (≈ 40 ns). Peak bandwidths
-    // match the paper's §1 STREAM-Copy calibration (115 vs 431 GB/s).
-    DramConfig {
-        vaults: 32,
-        banks_per_vault: 8,
-        row_bytes: 256,
-        line_bytes: LINE,
-        row_hit_cycles: 50,
-        act_cycles: 50,
-        pre_act_cycles: 100,
-        host_link_cycles: 96,
-        host_peak_bw: 115.0e9,
-        ndp_peak_bw: 431.0e9,
-        epj_bit_internal: 2.0,
-        epj_bit_logic: 8.0,
-        epj_bit_link: 2.0,
-    }
-}
-
-fn noc_cfg() -> NocConfig {
-    NocConfig {
-        cycles_per_hop: 3,
-        epj_router: 63.0,
-        epj_link: 71.0,
-    }
-}
-
 impl SystemConfig {
     /// Baseline host CPU (Table 1, fixed 8 MiB L3).
     pub fn host(cores: usize, core: CoreModel) -> SystemConfig {
-        SystemConfig {
-            kind: SystemKind::Host,
-            core,
-            cores,
-            freq_hz: 2.4e9,
-            issue_width: 4,
-            rob: 128,
-            lsq: 32,
-            mshrs: 10,
-            l1: l1_cfg(),
-            l2: Some(l2_cfg()),
-            l3: Some(l3_cfg(8 << 20)),
-            l3_banks: 16,
-            prefetch: false,
-            pf_streams: 16,
-            pf_degree: 2,
-            dram: dram_cfg(),
-            noc: noc_cfg(),
-            nuca: false,
-        }
+        super::spec::SystemSpec::host().build(cores, core)
     }
 
     /// Host + L2 stream prefetcher.
     pub fn host_prefetch(cores: usize, core: CoreModel) -> SystemConfig {
-        let mut c = Self::host(cores, core);
-        c.kind = SystemKind::HostPrefetch;
-        c.prefetch = true;
-        c
+        super::spec::SystemSpec::host_prefetch().build(cores, core)
     }
 
     /// NDP cores in the logic layer: read-only L1 only, no prefetcher.
     pub fn ndp(cores: usize, core: CoreModel) -> SystemConfig {
-        let mut c = Self::host(cores, core);
-        c.kind = SystemKind::Ndp;
-        c.l2 = None;
-        c.l3 = None;
-        c
+        super::spec::SystemSpec::ndp().build(cores, core)
     }
 
     /// §3.4 NUCA host: L3 = 2 MiB/core on an (n+1)×(n+1) mesh.
     pub fn host_nuca(cores: usize, core: CoreModel) -> SystemConfig {
-        let mut c = Self::host(cores, core);
-        c.kind = SystemKind::HostNuca;
-        c.l3 = Some(l3_cfg((2 << 20) * cores));
-        c.l3_banks = cores.max(1);
-        c.nuca = true;
-        c
+        super::spec::SystemSpec::host_nuca().build(cores, core)
     }
 
-    pub fn by_kind(kind: SystemKind, cores: usize, core: CoreModel) -> SystemConfig {
-        match kind {
-            SystemKind::Host => Self::host(cores, core),
-            SystemKind::HostPrefetch => Self::host_prefetch(cores, core),
-            SystemKind::Ndp => Self::ndp(cores, core),
-            SystemKind::HostNuca => Self::host_nuca(cores, core),
-        }
+    /// LLC distributed over the mesh NoC?
+    pub fn is_nuca(&self) -> bool {
+        self.backend == MemoryBackend::NucaMesh
+    }
+
+    /// Cores sit in the logic layer with direct vault access?
+    pub fn is_direct_vault(&self) -> bool {
+        self.backend == MemoryBackend::DirectVault
     }
 
     /// Peak DRAM bandwidth this system can draw (bytes/s).
     pub fn peak_bw(&self) -> f64 {
-        match self.kind {
-            SystemKind::Ndp => self.dram.ndp_peak_bw,
-            _ => self.dram.host_peak_bw,
+        if self.is_direct_vault() {
+            self.dram.ndp_peak_bw
+        } else {
+            self.dram.host_peak_bw
         }
     }
 
@@ -281,6 +246,8 @@ mod tests {
         assert_eq!(h.l3_banks, 16);
         assert_eq!(h.dram.vaults, 32);
         assert_eq!(h.dram.banks_per_vault, 8);
+        assert_eq!(h.label, "host");
+        assert_eq!(h.backend, MemoryBackend::HmcLink);
     }
 
     #[test]
@@ -288,6 +255,7 @@ mod tests {
         let n = SystemConfig::ndp(16, CoreModel::InOrder);
         assert!(n.l2.is_none() && n.l3.is_none());
         assert!(!n.prefetch);
+        assert!(n.l1_read_only);
         assert!(n.peak_bw() > 3.0 * SystemConfig::host(16, CoreModel::InOrder).peak_bw());
     }
 
@@ -297,6 +265,7 @@ mod tests {
         assert_eq!(c.l3.unwrap().size_bytes, 512 << 20);
         assert_eq!(c.l3_banks, 256);
         assert_eq!(c.mesh_side(), 17);
+        assert!(c.is_nuca() && !c.is_direct_vault());
     }
 
     #[test]
@@ -304,5 +273,17 @@ mod tests {
         let c = SystemConfig::host(1, CoreModel::OutOfOrder);
         let ratio = c.dram.ndp_peak_bw / c.dram.host_peak_bw;
         assert!((ratio - 3.7478).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [
+            MemoryBackend::HmcLink,
+            MemoryBackend::DirectVault,
+            MemoryBackend::NucaMesh,
+        ] {
+            assert_eq!(MemoryBackend::parse(b.label()), Some(b));
+        }
+        assert_eq!(MemoryBackend::parse("bogus"), None);
     }
 }

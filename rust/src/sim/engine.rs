@@ -21,7 +21,7 @@
 //! here.
 
 use super::cache::{Cache, LookupResult};
-use super::config::{CoreModel, SystemConfig, SystemKind};
+use super::config::{CoreModel, SystemConfig};
 use super::dram::{md1_wait, Dram};
 use super::energy::{energy, EnergyBreakdown, EnergyEvents};
 use super::events::SoaTrace;
@@ -52,9 +52,10 @@ struct CoreAgg {
     /// Load counts by [dep][level].
     cnt: [[u64; 4]; 2],
     /// Demand (load+store) miss counters — exclude writeback and prefetch
-    /// traffic so LFMR/MPKI match the paper's definitions.
+    /// traffic so LFMR/MPKI match the paper's definitions. `d_llc_miss`
+    /// counts demand misses at the deepest declared cache level.
     d_l1_miss: u64,
-    d_l3_miss: u64,
+    d_llc_miss: u64,
     /// Demand loads that hit a prefetched L2 line, by original source
     /// (L3 / DRAM). Charged a late-prefetch partial latency: a degree-2
     /// stream prefetcher cannot fully hide the fetch at high demand rates.
@@ -70,7 +71,8 @@ struct CoreAgg {
 /// Everything the methodology needs from one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    pub kind: SystemKind,
+    /// Label of the system spec this run was lowered from.
+    pub system: String,
     pub core_model: CoreModel,
     pub cores: usize,
     /// Wall-clock seconds (slowest core).
@@ -173,7 +175,7 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     let _sim_span = telemetry::span_args(
         "simulate",
         vec![
-            ("kind".to_string(), Json::from(format!("{:?}", cfg.kind))),
+            ("system".to_string(), Json::from(cfg.label.clone())),
             ("cores".to_string(), Json::from(n)),
             ("accesses".to_string(), Json::from(total_accesses)),
         ],
@@ -322,9 +324,10 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     // Imbalanced vault pressure lowers the usable aggregate bandwidth.
     let peak_bw = cfg.peak_bw() / vault_imbalance.max(1.0).min(4.0);
 
-    let mut dram_extra = match cfg.kind {
-        SystemKind::Ndp => 0.0,
-        _ => cfg.dram.host_link_cycles as f64,
+    let mut dram_extra = if cfg.is_direct_vault() {
+        0.0
+    } else {
+        cfg.dram.host_link_cycles as f64
     };
     if opt.ndp_mesh {
         dram_extra += mean_hops * cfg.noc.cycles_per_hop as f64;
@@ -339,7 +342,9 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     //  * bandwidth regime: execution time has a hard floor of
     //    bytes / peak_bw. The *reported* rho/loaded latency use the true
     //    utilization so AMAT reflects saturation.
-    let base_dram = if cfg.l3.is_some() { lat_l3_base } else { lat_l1 };
+    // Lookup latency down the declared hierarchy before memory is
+    // reached (collapses to lat_l1 when no L2/L3 exists).
+    let base_dram = lat_l3_base;
     let mut dram_lat = base_dram + mean_service + dram_extra;
     let mut noc_queue = 0.0;
     let mut time_cycles = 0.0f64;
@@ -348,7 +353,7 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
 
     let stall_cycles = |dram_lat: f64, noc_queue: f64| -> f64 {
         let lat_l3 = lat_l3_base
-            + if cfg.nuca {
+            + if cfg.is_nuca() {
                 mean_hops * cfg.noc.cycles_per_hop as f64 + noc_queue
             } else {
                 0.0
@@ -401,7 +406,7 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
         let queue = md1_wait(mean_service, rho_fb);
         let new_dram_lat = base_dram + mean_service + dram_extra + queue;
         // NUCA NoC contention from L3 traffic.
-        if cfg.nuca {
+        if cfg.is_nuca() {
             let links = (2 * nuca_mesh.nodes()) as f64;
             let inj = total_noc_reqs as f64 / new_time.max(1.0);
             let load = super::noc::NocLoad {
@@ -448,7 +453,7 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     // Memory-bound % from the final latency set (recompute stalls of the
     // slowest core; use aggregate ratio which is what VTune reports).
     let lat_l3 = lat_l3_base
-        + if cfg.nuca {
+        + if cfg.is_nuca() {
             mean_hops * cfg.noc.cycles_per_hop as f64 + noc_queue
         } else {
             0.0
@@ -506,14 +511,14 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     let line_touches: u64 = agg.iter().map(|a| a.line_touches).sum();
 
     // LFMR / MPKI over *demand* accesses (paper §2.4.1; writeback and
-    // prefetch traffic excluded). For NDP runs (no L3) we report the
-    // L1-based equivalents so the fields stay meaningful.
+    // prefetch traffic excluded). For single-level hierarchies (NDP) we
+    // report the L1-based equivalents so the fields stay meaningful.
     let d_l1_miss: u64 = agg.iter().map(|a| a.d_l1_miss).sum();
-    let d_l3_miss: u64 = agg.iter().map(|a| a.d_l3_miss).sum();
-    let (lfmr, mpki) = if cfg.l3.is_some() {
+    let d_llc_miss: u64 = agg.iter().map(|a| a.d_llc_miss).sum();
+    let (lfmr, mpki) = if cfg.l2.is_some() || cfg.l3.is_some() {
         (
-            d_l3_miss as f64 / d_l1_miss.max(1) as f64,
-            d_l3_miss as f64 / (instr as f64 / 1000.0),
+            d_llc_miss as f64 / d_l1_miss.max(1) as f64,
+            d_llc_miss as f64 / (instr as f64 / 1000.0),
         )
     } else {
         (1.0, d_l1_miss as f64 / (instr as f64 / 1000.0))
@@ -538,7 +543,7 @@ pub fn simulate_events_opt(cfg: &SystemConfig, events: &SoaTrace, opt: SimOption
     let e = energy(cfg, &ev);
 
     SimResult {
-        kind: cfg.kind,
+        system: cfg.label.clone(),
         core_model: cfg.core,
         cores: n,
         time_s,
@@ -611,16 +616,19 @@ fn replay_one(
         last_line[core] = ln;
     }
     let dep = a.dep as usize;
-    let is_ndp = cfg.kind == SystemKind::Ndp;
 
-    // NDP stores bypass the read-only L1 entirely.
-    if is_ndp && a.write {
+    // Read-only L1 (NDP logic-layer cores): stores bypass the cache
+    // entirely and write through to memory.
+    if cfg.l1_read_only && a.write {
         l1s[core].invalidate(a.addr);
         let (_, _svc) = dram.access(a.addr, true);
         // Fine-grained 8 B write through the logic layer (no
         // read-for-ownership, no full-line transfer).
         ev.dram_bytes += 8;
         ev.logic_bytes += 8;
+        if !cfg.is_direct_vault() {
+            ev.link_bytes += 8;
+        }
         if opt.ndp_mesh {
             let from = core % cfg.dram.vaults;
             let hops = ndp_mesh.hops(from, dram.vault_of(a.addr));
@@ -632,7 +640,7 @@ fn replay_one(
     }
 
     // L1.
-    match l1s[core].access(a.addr, a.write && !is_ndp) {
+    match l1s[core].access(a.addr, a.write && !cfg.l1_read_only) {
         LookupResult::Hit => {
             ev.l1_hits += 1;
             if !a.write {
@@ -645,57 +653,78 @@ fn replay_one(
             agg[core].d_l1_miss += 1;
             if let Some(e) = evicted {
                 if e.dirty {
-                    // Writeback into L2 (host) or DRAM (NDP; cannot happen:
-                    // NDP L1 is read-only so lines are never dirty).
+                    // Writeback to the next level down: L2 if declared,
+                    // else the LLC, else memory. (A read-only L1 never
+                    // holds dirty lines.)
                     if let Some(l2) = l2s[core].as_mut() {
                         let _ = l2.access(e.line_addr, true);
                         ev.l2_hits += 1; // writeback port access energy
+                    } else if let Some(l3c) = l3.as_mut() {
+                        let _ = l3c.access(e.line_addr, true);
+                        ev.l3_hits += 1;
+                    } else if !cfg.l1_read_only {
+                        dram.access(e.line_addr, true);
+                        ev.dram_bytes += line;
+                        ev.logic_bytes += line;
+                        if !cfg.is_direct_vault() {
+                            ev.link_bytes += line;
+                        }
                     }
                 }
             }
         }
     }
 
-    if is_ndp {
-        // L1 miss -> direct vault access.
-        let (_, svc) = dram.access(a.addr, false);
+    if cfg.l2.is_none() && cfg.l3.is_none() {
+        // Single-level hierarchy: L1 miss -> memory directly (NDP: the
+        // vault under the logic layer).
+        let (_, svc) = dram.access(a.addr, a.write);
         bb_llc[a.bb as usize] += 1;
         ev.dram_bytes += line;
         ev.logic_bytes += line;
-        let mut extra_hops = 0u64;
+        if !cfg.is_direct_vault() {
+            ev.link_bytes += line;
+        }
         if opt.ndp_mesh {
             let from = core % cfg.dram.vaults;
-            extra_hops = ndp_mesh.hops(from, dram.vault_of(a.addr));
-            hop_hist.record(extra_hops);
-            ev.noc_router += extra_hops + 1;
-            ev.noc_links += extra_hops;
+            let hops = ndp_mesh.hops(from, dram.vault_of(a.addr));
+            hop_hist.record(hops);
+            ev.noc_router += hops + 1;
+            ev.noc_links += hops;
         }
         if !a.write {
             agg[core].cnt[dep][3] += 1;
             agg[core].dram_service_sum += svc as f64;
         }
-        let _ = extra_hops;
         return;
     }
 
-    // Host: L2.
-    let l2 = l2s[core].as_mut().expect("host config has L2");
+    // Private L2, when declared.
     let l2_line = a.addr / line;
     let mut l2_result_hit = false;
     let mut pf_src: Option<bool> = None; // Some(from_dram) if pf-covered
-    match l2.access(a.addr, a.write) {
-        LookupResult::Hit => {
-            ev.l2_hits += 1;
-            l2_result_hit = true;
-            pf_src = pf_pending[core].remove(&l2_line);
-        }
-        LookupResult::Miss { evicted } => {
-            ev.l2_misses += 1;
-            if let Some(e) = evicted {
-                if e.dirty {
-                    if let Some(l3c) = l3.as_mut() {
-                        let _ = l3c.access(e.line_addr, true);
-                        ev.l3_hits += 1; // writeback access energy
+    if let Some(l2) = l2s[core].as_mut() {
+        match l2.access(a.addr, a.write) {
+            LookupResult::Hit => {
+                ev.l2_hits += 1;
+                l2_result_hit = true;
+                pf_src = pf_pending[core].remove(&l2_line);
+            }
+            LookupResult::Miss { evicted } => {
+                ev.l2_misses += 1;
+                if let Some(e) = evicted {
+                    if e.dirty {
+                        if let Some(l3c) = l3.as_mut() {
+                            let _ = l3c.access(e.line_addr, true);
+                            ev.l3_hits += 1; // writeback access energy
+                        } else {
+                            dram.access(e.line_addr, true);
+                            ev.dram_bytes += line;
+                            ev.logic_bytes += line;
+                            if !cfg.is_direct_vault() {
+                                ev.link_bytes += line;
+                            }
+                        }
                     }
                 }
             }
@@ -722,14 +751,18 @@ fn replay_one(
                 let (_, _svc) = dram.access(pf_addr, false);
                 ev.dram_bytes += line;
                 ev.logic_bytes += line;
-                ev.link_bytes += line;
+                if !cfg.is_direct_vault() {
+                    ev.link_bytes += line;
+                }
                 if let Some(l3c) = l3.as_mut() {
                     if let Some(evd) = l3c.fill(pf_addr) {
                         if evd.dirty {
                             dram.access(evd.line_addr, true);
                             ev.dram_bytes += line;
                             ev.logic_bytes += line;
-                            ev.link_bytes += line;
+                            if !cfg.is_direct_vault() {
+                                ev.link_bytes += line;
+                            }
                         }
                     }
                 }
@@ -756,10 +789,24 @@ fn replay_one(
         return;
     }
 
-    // Host: shared L3.
-    let l3c = l3.as_mut().expect("host config has L3");
+    // Shared LLC, when declared; otherwise the miss goes to memory.
+    let Some(l3c) = l3.as_mut() else {
+        let (_, svc) = dram.access(a.addr, a.write);
+        bb_llc[a.bb as usize] += 1;
+        agg[core].d_llc_miss += 1;
+        ev.dram_bytes += line;
+        ev.logic_bytes += line;
+        if !cfg.is_direct_vault() {
+            ev.link_bytes += line;
+        }
+        if !a.write {
+            agg[core].cnt[dep][3] += 1;
+            agg[core].dram_service_sum += svc as f64;
+        }
+        return;
+    };
     // NUCA: request travels core -> L3 bank of this line.
-    if cfg.nuca {
+    if cfg.is_nuca() {
         let bank = (l2_line as usize) % cfg.l3_banks;
         let bank_node = bank % nuca_mesh.nodes();
         let core_node = core % nuca_mesh.nodes();
@@ -778,20 +825,24 @@ fn replay_one(
         }
         LookupResult::Miss { evicted } => {
             ev.l3_misses += 1;
-            agg[core].d_l3_miss += 1;
+            agg[core].d_llc_miss += 1;
             bb_llc[a.bb as usize] += 1;
             if let Some(e) = evicted {
                 if e.dirty {
                     dram.access(e.line_addr, true);
                     ev.dram_bytes += line;
                     ev.logic_bytes += line;
-                    ev.link_bytes += line;
+                    if !cfg.is_direct_vault() {
+                        ev.link_bytes += line;
+                    }
                 }
             }
             let (_, svc) = dram.access(a.addr, a.write);
             ev.dram_bytes += line;
             ev.logic_bytes += line;
-            ev.link_bytes += line;
+            if !cfg.is_direct_vault() {
+                ev.link_bytes += line;
+            }
             if !a.write {
                 agg[core].cnt[dep][3] += 1;
                 agg[core].dram_service_sum += svc as f64;

@@ -11,9 +11,11 @@ pub mod engine;
 pub mod events;
 pub mod noc;
 pub mod prefetcher;
+pub mod spec;
 
-pub use config::{CoreModel, SystemConfig, SystemKind, CORE_SWEEP, LINE};
+pub use config::{CoreModel, MemoryBackend, SystemConfig, CORE_SWEEP, LINE};
 pub use engine::{simulate, simulate_events, SimResult};
+pub use spec::{SpecError, SystemSpec};
 pub use events::{SoaTrace, TraceAnalysis};
 
 /// One memory reference in a workload trace.

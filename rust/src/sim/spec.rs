@@ -1,0 +1,1110 @@
+//! Data-driven system descriptions: the composable replacement for the
+//! old closed `SystemKind` enum.
+//!
+//! A [`SystemSpec`] declares a complete memory-system design — core
+//! parameters, an ordered cache hierarchy, an optional stream
+//! prefetcher, and the memory backend — and lowers to the simulator's
+//! [`SystemConfig`] for any (cores, core-model) point via
+//! [`SystemSpec::build`]. The four paper systems (Table 1) are built-in
+//! presets that lower to byte-identical configurations; arbitrary
+//! designs load from strictly-validated JSON ([`SystemSpec::load`])
+//! without touching Rust, or are composed inline with
+//! [`SystemSpec::builder`].
+//!
+//! Hierarchy shape: the simulator replays against at most three cache
+//! slots — a private L1, an optional private L2, and an optional shared
+//! LLC. A spec's `caches` list is therefore 1–3 levels: the first must
+//! be private, at most one further private level (the L2 slot), and at
+//! most one shared level which must come last (the LLC slot). A 2-level
+//! `[private, shared]` spec maps the shared level to the LLC slot with
+//! no L2 in between.
+
+use super::config::{
+    CacheConfig, CoreModel, DramConfig, MemoryBackend, NocConfig, SystemConfig, LINE,
+};
+use crate::util::json::Json;
+use std::fmt;
+use std::path::Path;
+
+/// Structured validation/loading error for a [`SystemSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// File could not be read.
+    Io(String),
+    /// Not valid JSON.
+    Parse(String),
+    /// JSON contains a field the schema does not define (strict mode:
+    /// typos must not silently become defaults).
+    UnknownField(String),
+    /// A required field is absent.
+    MissingField(String),
+    /// A field is present but its value is out of range or mistyped.
+    BadValue(String),
+    /// The cache list is empty — the simulator needs at least an L1.
+    EmptyHierarchy,
+    /// The cache list has an unsupported shape.
+    Hierarchy(String),
+    /// Degenerate cache geometry (e.g. sets divide to 0, or a
+    /// non-power-of-two set count) that would panic deep in `Cache::new`.
+    Geometry(String),
+    /// Bad spec name (empty, or characters the CLI/store cannot carry).
+    BadName(String),
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Io(m) => write!(f, "cannot read spec: {m}"),
+            SpecError::Parse(m) => write!(f, "spec is not valid JSON: {m}"),
+            SpecError::UnknownField(m) => write!(f, "unknown field {m:?} in system spec"),
+            SpecError::MissingField(m) => write!(f, "system spec is missing field {m:?}"),
+            SpecError::BadValue(m) => write!(f, "bad value in system spec: {m}"),
+            SpecError::EmptyHierarchy => {
+                write!(f, "system spec has an empty cache hierarchy (need at least an L1)")
+            }
+            SpecError::Hierarchy(m) => write!(f, "unsupported cache hierarchy: {m}"),
+            SpecError::Geometry(m) => write!(f, "degenerate cache geometry: {m}"),
+            SpecError::BadName(m) => write!(f, "bad system name: {m}"),
+        }
+    }
+}
+
+/// Core microarchitecture parameters (identical across the paper's
+/// systems, so they default to Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreParams {
+    pub freq_hz: f64,
+    pub issue_width: u64,
+    pub rob: u64,
+    pub lsq: u64,
+    /// Max outstanding L1 misses per core (MSHRs) — MLP ceiling.
+    pub mshrs: u64,
+}
+
+impl Default for CoreParams {
+    fn default() -> CoreParams {
+        CoreParams {
+            freq_hz: 2.4e9,
+            issue_width: 4,
+            rob: 128,
+            lsq: 32,
+            mshrs: 10,
+        }
+    }
+}
+
+/// One declared cache level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheLevelSpec {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    pub latency_cycles: u64,
+    /// pJ per hit / per miss (lookup energy).
+    pub epj_hit: f64,
+    pub epj_miss: f64,
+    /// Shared across cores (the LLC slot). At most one, and last.
+    pub shared: bool,
+    /// Bank count of a shared level (ignored for private levels, and
+    /// overridden to `cores` when `scale_with_cores` is set).
+    pub banks: usize,
+    /// NUCA-style LLC: `size_bytes` is *per core* and the bank count
+    /// equals the core count. Only valid on the shared level.
+    pub scale_with_cores: bool,
+}
+
+impl CacheLevelSpec {
+    fn to_cache_cfg(self, size_bytes: usize) -> CacheConfig {
+        CacheConfig {
+            size_bytes,
+            ways: self.ways,
+            line_bytes: self.line_bytes,
+            latency_cycles: self.latency_cycles,
+            epj_hit: self.epj_hit,
+            epj_miss: self.epj_miss,
+        }
+    }
+}
+
+/// Stream-prefetcher parameters (sits at the private L2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefetcherSpec {
+    pub streams: usize,
+    pub degree: usize,
+}
+
+/// A complete, declarative system description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemSpec {
+    /// Label used everywhere the system is named: profiles, the results
+    /// store, report tables, and the CLI.
+    pub name: String,
+    pub core: CoreParams,
+    /// Ordered cache levels, innermost first. See the module docs for
+    /// the supported shapes.
+    pub caches: Vec<CacheLevelSpec>,
+    /// Stores bypass the L1 straight to memory (NDP logic-layer cores
+    /// keep a read-only L1 so no coherence traffic crosses vaults).
+    pub l1_read_only: bool,
+    pub prefetcher: Option<PrefetcherSpec>,
+    pub backend: MemoryBackend,
+    pub dram: DramConfig,
+    pub noc: NocConfig,
+}
+
+fn l1_level() -> CacheLevelSpec {
+    CacheLevelSpec {
+        size_bytes: 32 << 10,
+        ways: 8,
+        line_bytes: LINE,
+        latency_cycles: 4,
+        epj_hit: 15.0,
+        epj_miss: 33.0,
+        shared: false,
+        banks: 16,
+        scale_with_cores: false,
+    }
+}
+
+fn l2_level() -> CacheLevelSpec {
+    CacheLevelSpec {
+        size_bytes: 256 << 10,
+        ways: 8,
+        line_bytes: LINE,
+        latency_cycles: 7,
+        epj_hit: 46.0,
+        epj_miss: 93.0,
+        shared: false,
+        banks: 16,
+        scale_with_cores: false,
+    }
+}
+
+fn l3_level(size_bytes: usize, scale_with_cores: bool) -> CacheLevelSpec {
+    CacheLevelSpec {
+        size_bytes,
+        ways: 16,
+        line_bytes: LINE,
+        latency_cycles: 27,
+        epj_hit: 945.0,
+        epj_miss: 1904.0,
+        shared: true,
+        banks: 16,
+        scale_with_cores,
+    }
+}
+
+impl SystemSpec {
+    /// Baseline host CPU (Table 1, fixed 8 MiB L3, off-chip HMC link).
+    pub fn host() -> SystemSpec {
+        SystemSpec {
+            name: "host".to_string(),
+            core: CoreParams::default(),
+            caches: vec![l1_level(), l2_level(), l3_level(8 << 20, false)],
+            l1_read_only: false,
+            prefetcher: None,
+            backend: MemoryBackend::HmcLink,
+            dram: DramConfig::default(),
+            noc: NocConfig::default(),
+        }
+    }
+
+    /// Host + L2 stream prefetcher (2-degree, 16 streams).
+    pub fn host_prefetch() -> SystemSpec {
+        let mut s = SystemSpec::host();
+        s.name = "host+pf".to_string();
+        s.prefetcher = Some(PrefetcherSpec {
+            streams: 16,
+            degree: 2,
+        });
+        s
+    }
+
+    /// NDP cores in the HMC logic layer: read-only L1 only, direct
+    /// vault access (no off-chip link).
+    pub fn ndp() -> SystemSpec {
+        let mut s = SystemSpec::host();
+        s.name = "ndp".to_string();
+        s.caches = vec![l1_level()];
+        s.l1_read_only = true;
+        s.backend = MemoryBackend::DirectVault;
+        s
+    }
+
+    /// §3.4 NUCA host: L3 scales 2 MiB/core, banks on a 2-D mesh NoC.
+    pub fn host_nuca() -> SystemSpec {
+        let mut s = SystemSpec::host();
+        s.name = "host-nuca".to_string();
+        s.caches = vec![l1_level(), l2_level(), l3_level(2 << 20, true)];
+        s.backend = MemoryBackend::NucaMesh;
+        s
+    }
+
+    /// All four built-in presets in paper order.
+    pub fn presets() -> Vec<SystemSpec> {
+        vec![
+            SystemSpec::host(),
+            SystemSpec::host_prefetch(),
+            SystemSpec::ndp(),
+            SystemSpec::host_nuca(),
+        ]
+    }
+
+    /// Look up a preset by name (accepting the CLI's historical
+    /// aliases `pf` and `nuca`).
+    pub fn preset(name: &str) -> Option<SystemSpec> {
+        match name {
+            "host" => Some(SystemSpec::host()),
+            "host+pf" | "pf" => Some(SystemSpec::host_prefetch()),
+            "ndp" => Some(SystemSpec::ndp()),
+            "host-nuca" | "nuca" => Some(SystemSpec::host_nuca()),
+            _ => None,
+        }
+    }
+
+    /// The default sweep grid: the paper's three primary systems.
+    pub fn default_sweep() -> Vec<SystemSpec> {
+        vec![
+            SystemSpec::host(),
+            SystemSpec::host_prefetch(),
+            SystemSpec::ndp(),
+        ]
+    }
+
+    /// The full report grid: the three primary systems plus the §3.4
+    /// NUCA variant.
+    pub fn paper_sweep() -> Vec<SystemSpec> {
+        SystemSpec::presets()
+    }
+
+    /// Resolve a CLI `--systems` element: a preset name or a path to a
+    /// JSON spec file.
+    pub fn resolve(arg: &str) -> Result<SystemSpec, SpecError> {
+        if let Some(p) = SystemSpec::preset(arg) {
+            return Ok(p);
+        }
+        if arg.ends_with(".json") || arg.contains('/') || arg.contains('\\') {
+            return SystemSpec::load(Path::new(arg));
+        }
+        Err(SpecError::BadName(format!(
+            "unknown system {arg:?} (presets: host, host+pf, ndp, host-nuca; \
+             or give a path to a .json spec file)"
+        )))
+    }
+
+    /// Lower to a simulator configuration for one (cores, model) point.
+    pub fn build(&self, cores: usize, core: CoreModel) -> SystemConfig {
+        let l1 = self.caches[0].to_cache_cfg(self.caches[0].size_bytes);
+        let mut l2 = None;
+        let mut l3 = None;
+        let mut l3_banks = 16;
+        for level in &self.caches[1..] {
+            if level.shared {
+                let size = if level.scale_with_cores {
+                    level.size_bytes * cores
+                } else {
+                    level.size_bytes
+                };
+                l3 = Some(level.to_cache_cfg(size));
+                l3_banks = if level.scale_with_cores {
+                    cores.max(1)
+                } else {
+                    level.banks
+                };
+            } else {
+                l2 = Some(level.to_cache_cfg(level.size_bytes));
+            }
+        }
+        SystemConfig {
+            label: self.name.clone(),
+            backend: self.backend,
+            l1_read_only: self.l1_read_only,
+            core,
+            cores,
+            freq_hz: self.core.freq_hz,
+            issue_width: self.core.issue_width,
+            rob: self.core.rob,
+            lsq: self.core.lsq,
+            mshrs: self.core.mshrs,
+            l1,
+            l2,
+            l3,
+            l3_banks,
+            prefetch: self.prefetcher.is_some(),
+            pf_streams: self.prefetcher.map_or(16, |p| p.streams),
+            pf_degree: self.prefetcher.map_or(2, |p| p.degree),
+            dram: self.dram,
+            noc: self.noc,
+        }
+    }
+
+    /// Stable identity of this spec for cache/checkpoint fingerprints:
+    /// a hash of the canonical serialization, so a respelled-but-equal
+    /// spec (defaults written out, different key order in the source
+    /// JSON) fingerprints identically while any semantic difference
+    /// changes it.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{:016x}",
+            crate::util::fault::key_of(&self.to_json().to_string_compact())
+        )
+    }
+
+    /// Check every structural rule. `Ok(())` means [`build`] lowers to
+    /// a configuration the engine can run for any core count without
+    /// panicking.
+    ///
+    /// [`build`]: SystemSpec::build
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.name.is_empty() {
+            return Err(SpecError::BadName("name must be non-empty".to_string()));
+        }
+        if !self
+            .name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '+' | '-' | '_' | '.'))
+        {
+            return Err(SpecError::BadName(format!(
+                "{:?}: only alphanumerics and + - _ . are allowed",
+                self.name
+            )));
+        }
+        if self.caches.is_empty() {
+            return Err(SpecError::EmptyHierarchy);
+        }
+        if self.caches.len() > 3 {
+            return Err(SpecError::Hierarchy(format!(
+                "{} levels declared; the simulator supports at most 3 (L1, L2, LLC)",
+                self.caches.len()
+            )));
+        }
+        if self.caches[0].shared {
+            return Err(SpecError::Hierarchy(
+                "the first (innermost) level must be private".to_string(),
+            ));
+        }
+        let shared = self.caches.iter().filter(|l| l.shared).count();
+        if shared > 1 {
+            return Err(SpecError::Hierarchy(
+                "at most one shared (LLC) level is supported".to_string(),
+            ));
+        }
+        if shared == 1 && !self.caches.last().unwrap().shared {
+            return Err(SpecError::Hierarchy(
+                "the shared (LLC) level must be the last level".to_string(),
+            ));
+        }
+        let mid_private = self.caches[1..].iter().filter(|l| !l.shared).count();
+        if mid_private > 1 {
+            return Err(SpecError::Hierarchy(
+                "at most one private mid-level (L2) is supported".to_string(),
+            ));
+        }
+        for (i, level) in self.caches.iter().enumerate() {
+            if level.scale_with_cores && !level.shared {
+                return Err(SpecError::BadValue(format!(
+                    "caches[{i}]: scale_with_cores is only valid on the shared level"
+                )));
+            }
+            if level.shared && !level.scale_with_cores && level.banks == 0 {
+                return Err(SpecError::BadValue(format!(
+                    "caches[{i}]: a shared level needs banks >= 1"
+                )));
+            }
+            validate_geometry(i, level)?;
+        }
+        if let Some(p) = &self.prefetcher {
+            let has_private_l2 = self.caches.len() >= 2 && !self.caches[1].shared;
+            if !has_private_l2 {
+                return Err(SpecError::Hierarchy(
+                    "a prefetcher requires a private L2 to sit at".to_string(),
+                ));
+            }
+            if p.streams == 0 || p.degree == 0 {
+                return Err(SpecError::BadValue(
+                    "prefetcher streams and degree must be >= 1".to_string(),
+                ));
+            }
+        }
+        if self.backend == MemoryBackend::NucaMesh && shared == 0 {
+            return Err(SpecError::Hierarchy(
+                "the nuca-mesh backend requires a shared (LLC) level".to_string(),
+            ));
+        }
+        if !(self.core.freq_hz.is_finite() && self.core.freq_hz > 0.0) {
+            return Err(SpecError::BadValue("core.freq_hz must be > 0".to_string()));
+        }
+        for (what, v) in [
+            ("core.issue_width", self.core.issue_width),
+            ("core.rob", self.core.rob),
+            ("core.lsq", self.core.lsq),
+            ("core.mshrs", self.core.mshrs),
+        ] {
+            if v == 0 {
+                return Err(SpecError::BadValue(format!("{what} must be >= 1")));
+            }
+        }
+        for (what, v) in [
+            ("dram.vaults", self.dram.vaults),
+            ("dram.banks_per_vault", self.dram.banks_per_vault),
+            ("dram.row_bytes", self.dram.row_bytes),
+            ("dram.line_bytes", self.dram.line_bytes),
+        ] {
+            if v == 0 {
+                return Err(SpecError::BadValue(format!("{what} must be >= 1")));
+            }
+        }
+        for (what, v) in [
+            ("dram.host_peak_bw", self.dram.host_peak_bw),
+            ("dram.ndp_peak_bw", self.dram.ndp_peak_bw),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(SpecError::BadValue(format!("{what} must be > 0")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON form: every field written out explicitly, so
+    /// serialize → parse is the identity and [`fingerprint`] is
+    /// spelling-invariant.
+    ///
+    /// [`fingerprint`]: SystemSpec::fingerprint
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str());
+        j.set("backend", self.backend.label());
+        j.set("l1_read_only", self.l1_read_only);
+        let mut core = Json::obj();
+        core.set("freq_hz", self.core.freq_hz)
+            .set("issue_width", self.core.issue_width)
+            .set("rob", self.core.rob)
+            .set("lsq", self.core.lsq)
+            .set("mshrs", self.core.mshrs);
+        j.set("core", core);
+        let caches: Vec<Json> = self
+            .caches
+            .iter()
+            .map(|l| {
+                let mut jl = Json::obj();
+                jl.set("size_bytes", l.size_bytes)
+                    .set("ways", l.ways)
+                    .set("line_bytes", l.line_bytes)
+                    .set("latency_cycles", l.latency_cycles)
+                    .set("epj_hit", l.epj_hit)
+                    .set("epj_miss", l.epj_miss)
+                    .set("shared", l.shared)
+                    .set("banks", l.banks)
+                    .set("scale_with_cores", l.scale_with_cores);
+                jl
+            })
+            .collect();
+        j.set("caches", Json::Arr(caches));
+        match &self.prefetcher {
+            Some(p) => {
+                let mut jp = Json::obj();
+                jp.set("streams", p.streams).set("degree", p.degree);
+                j.set("prefetcher", jp);
+            }
+            None => {
+                j.set("prefetcher", Json::Null);
+            }
+        }
+        let mut dram = Json::obj();
+        dram.set("vaults", self.dram.vaults)
+            .set("banks_per_vault", self.dram.banks_per_vault)
+            .set("row_bytes", self.dram.row_bytes)
+            .set("line_bytes", self.dram.line_bytes)
+            .set("row_hit_cycles", self.dram.row_hit_cycles)
+            .set("act_cycles", self.dram.act_cycles)
+            .set("pre_act_cycles", self.dram.pre_act_cycles)
+            .set("host_link_cycles", self.dram.host_link_cycles)
+            .set("host_peak_bw", self.dram.host_peak_bw)
+            .set("ndp_peak_bw", self.dram.ndp_peak_bw)
+            .set("epj_bit_internal", self.dram.epj_bit_internal)
+            .set("epj_bit_logic", self.dram.epj_bit_logic)
+            .set("epj_bit_link", self.dram.epj_bit_link);
+        j.set("dram", dram);
+        let mut noc = Json::obj();
+        noc.set("cycles_per_hop", self.noc.cycles_per_hop)
+            .set("epj_router", self.noc.epj_router)
+            .set("epj_link", self.noc.epj_link);
+        j.set("noc", noc);
+        j
+    }
+
+    /// Parse and validate a spec from a JSON value. Strict: unknown
+    /// fields anywhere are errors, so a typo'd key can never silently
+    /// fall back to a default.
+    pub fn from_json(j: &Json) -> Result<SystemSpec, SpecError> {
+        let obj = as_obj(j, "system spec")?;
+        check_fields(
+            obj,
+            "",
+            &[
+                "name",
+                "backend",
+                "l1_read_only",
+                "core",
+                "caches",
+                "prefetcher",
+                "dram",
+                "noc",
+            ],
+        )?;
+        let name = j
+            .get("name")
+            .ok_or_else(|| SpecError::MissingField("name".to_string()))?
+            .as_str()
+            .ok_or_else(|| SpecError::BadValue("name must be a string".to_string()))?
+            .to_string();
+        let backend = match j.get("backend") {
+            None => MemoryBackend::HmcLink,
+            Some(b) => {
+                let s = b
+                    .as_str()
+                    .ok_or_else(|| SpecError::BadValue("backend must be a string".to_string()))?;
+                MemoryBackend::parse(s).ok_or_else(|| {
+                    SpecError::BadValue(format!(
+                        "backend {s:?} (expected hmc-link, direct-vault or nuca-mesh)"
+                    ))
+                })?
+            }
+        };
+        let l1_read_only = opt_bool(j, "", "l1_read_only")?.unwrap_or(false);
+        let core = match j.get("core") {
+            None => CoreParams::default(),
+            Some(c) => {
+                let cobj = as_obj(c, "core")?;
+                check_fields(cobj, "core.", &["freq_hz", "issue_width", "rob", "lsq", "mshrs"])?;
+                let d = CoreParams::default();
+                CoreParams {
+                    freq_hz: opt_f64(c, "core", "freq_hz")?.unwrap_or(d.freq_hz),
+                    issue_width: opt_u64(c, "core", "issue_width")?.unwrap_or(d.issue_width),
+                    rob: opt_u64(c, "core", "rob")?.unwrap_or(d.rob),
+                    lsq: opt_u64(c, "core", "lsq")?.unwrap_or(d.lsq),
+                    mshrs: opt_u64(c, "core", "mshrs")?.unwrap_or(d.mshrs),
+                }
+            }
+        };
+        let caches_json = j
+            .get("caches")
+            .ok_or_else(|| SpecError::MissingField("caches".to_string()))?
+            .as_arr()
+            .ok_or_else(|| SpecError::BadValue("caches must be an array".to_string()))?;
+        let mut caches = Vec::with_capacity(caches_json.len());
+        for (i, jl) in caches_json.iter().enumerate() {
+            let section = format!("caches[{i}]");
+            let lobj = as_obj(jl, &section)?;
+            check_fields(
+                lobj,
+                &format!("{section}."),
+                &[
+                    "size_bytes",
+                    "ways",
+                    "line_bytes",
+                    "latency_cycles",
+                    "epj_hit",
+                    "epj_miss",
+                    "shared",
+                    "banks",
+                    "scale_with_cores",
+                ],
+            )?;
+            caches.push(CacheLevelSpec {
+                size_bytes: req_usize(jl, &section, "size_bytes")?,
+                ways: req_usize(jl, &section, "ways")?,
+                line_bytes: opt_usize(jl, &section, "line_bytes")?.unwrap_or(LINE),
+                latency_cycles: req_u64(jl, &section, "latency_cycles")?,
+                epj_hit: req_f64(jl, &section, "epj_hit")?,
+                epj_miss: req_f64(jl, &section, "epj_miss")?,
+                shared: opt_bool(jl, &section, "shared")?.unwrap_or(false),
+                banks: opt_usize(jl, &section, "banks")?.unwrap_or(16),
+                scale_with_cores: opt_bool(jl, &section, "scale_with_cores")?.unwrap_or(false),
+            });
+        }
+        let prefetcher = match j.get("prefetcher") {
+            None | Some(Json::Null) => None,
+            Some(p) => {
+                let pobj = as_obj(p, "prefetcher")?;
+                check_fields(pobj, "prefetcher.", &["streams", "degree"])?;
+                Some(PrefetcherSpec {
+                    streams: opt_usize(p, "prefetcher", "streams")?.unwrap_or(16),
+                    degree: opt_usize(p, "prefetcher", "degree")?.unwrap_or(2),
+                })
+            }
+        };
+        let dram = match j.get("dram") {
+            None => DramConfig::default(),
+            Some(d) => {
+                let dobj = as_obj(d, "dram")?;
+                check_fields(
+                    dobj,
+                    "dram.",
+                    &[
+                        "vaults",
+                        "banks_per_vault",
+                        "row_bytes",
+                        "line_bytes",
+                        "row_hit_cycles",
+                        "act_cycles",
+                        "pre_act_cycles",
+                        "host_link_cycles",
+                        "host_peak_bw",
+                        "ndp_peak_bw",
+                        "epj_bit_internal",
+                        "epj_bit_logic",
+                        "epj_bit_link",
+                    ],
+                )?;
+                let def = DramConfig::default();
+                DramConfig {
+                    vaults: opt_usize(d, "dram", "vaults")?.unwrap_or(def.vaults),
+                    banks_per_vault: opt_usize(d, "dram", "banks_per_vault")?
+                        .unwrap_or(def.banks_per_vault),
+                    row_bytes: opt_usize(d, "dram", "row_bytes")?.unwrap_or(def.row_bytes),
+                    line_bytes: opt_usize(d, "dram", "line_bytes")?.unwrap_or(def.line_bytes),
+                    row_hit_cycles: opt_u64(d, "dram", "row_hit_cycles")?
+                        .unwrap_or(def.row_hit_cycles),
+                    act_cycles: opt_u64(d, "dram", "act_cycles")?.unwrap_or(def.act_cycles),
+                    pre_act_cycles: opt_u64(d, "dram", "pre_act_cycles")?
+                        .unwrap_or(def.pre_act_cycles),
+                    host_link_cycles: opt_u64(d, "dram", "host_link_cycles")?
+                        .unwrap_or(def.host_link_cycles),
+                    host_peak_bw: opt_f64(d, "dram", "host_peak_bw")?.unwrap_or(def.host_peak_bw),
+                    ndp_peak_bw: opt_f64(d, "dram", "ndp_peak_bw")?.unwrap_or(def.ndp_peak_bw),
+                    epj_bit_internal: opt_f64(d, "dram", "epj_bit_internal")?
+                        .unwrap_or(def.epj_bit_internal),
+                    epj_bit_logic: opt_f64(d, "dram", "epj_bit_logic")?
+                        .unwrap_or(def.epj_bit_logic),
+                    epj_bit_link: opt_f64(d, "dram", "epj_bit_link")?.unwrap_or(def.epj_bit_link),
+                }
+            }
+        };
+        let noc = match j.get("noc") {
+            None => NocConfig::default(),
+            Some(n) => {
+                let nobj = as_obj(n, "noc")?;
+                check_fields(nobj, "noc.", &["cycles_per_hop", "epj_router", "epj_link"])?;
+                let def = NocConfig::default();
+                NocConfig {
+                    cycles_per_hop: opt_u64(n, "noc", "cycles_per_hop")?
+                        .unwrap_or(def.cycles_per_hop),
+                    epj_router: opt_f64(n, "noc", "epj_router")?.unwrap_or(def.epj_router),
+                    epj_link: opt_f64(n, "noc", "epj_link")?.unwrap_or(def.epj_link),
+                }
+            }
+        };
+        let spec = SystemSpec {
+            name,
+            core,
+            caches,
+            l1_read_only,
+            prefetcher,
+            backend,
+            dram,
+            noc,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse and validate a spec from JSON text.
+    pub fn from_json_str(text: &str) -> Result<SystemSpec, SpecError> {
+        let j = Json::parse(text).map_err(SpecError::Parse)?;
+        SystemSpec::from_json(&j)
+    }
+
+    /// Load and validate a spec from a JSON file.
+    pub fn load(path: &Path) -> Result<SystemSpec, SpecError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| SpecError::Io(format!("{}: {e}", path.display())))?;
+        SystemSpec::from_json_str(&text)
+    }
+
+    /// Start composing a spec inline (defaults: Table 1 core/DRAM/NoC,
+    /// HMC-link backend, no caches — add levels innermost-first).
+    pub fn builder(name: &str) -> SystemSpecBuilder {
+        SystemSpecBuilder {
+            spec: SystemSpec {
+                name: name.to_string(),
+                core: CoreParams::default(),
+                caches: Vec::new(),
+                l1_read_only: false,
+                prefetcher: None,
+                backend: MemoryBackend::HmcLink,
+                dram: DramConfig::default(),
+                noc: NocConfig::default(),
+            },
+        }
+    }
+}
+
+fn validate_geometry(i: usize, l: &CacheLevelSpec) -> Result<(), SpecError> {
+    if l.size_bytes == 0 || l.ways == 0 || l.line_bytes == 0 {
+        return Err(SpecError::Geometry(format!(
+            "caches[{i}]: size_bytes, ways and line_bytes must all be >= 1"
+        )));
+    }
+    if !l.line_bytes.is_power_of_two() {
+        return Err(SpecError::Geometry(format!(
+            "caches[{i}]: line_bytes {} is not a power of two",
+            l.line_bytes
+        )));
+    }
+    if l.size_bytes % (l.line_bytes * l.ways) != 0 {
+        return Err(SpecError::Geometry(format!(
+            "caches[{i}]: size {} is not divisible by line_bytes*ways = {}",
+            l.size_bytes,
+            l.line_bytes * l.ways
+        )));
+    }
+    let sets = l.size_bytes / l.line_bytes / l.ways;
+    if sets == 0 || !sets.is_power_of_two() {
+        return Err(SpecError::Geometry(format!(
+            "caches[{i}]: set count {sets} (size {} / line {} / ways {}) must be a \
+             non-zero power of two",
+            l.size_bytes, l.line_bytes, l.ways
+        )));
+    }
+    Ok(())
+}
+
+/// Fluent inline composition of a [`SystemSpec`] (used by examples and
+/// design-space studies; `build()` runs full validation).
+pub struct SystemSpecBuilder {
+    spec: SystemSpec,
+}
+
+impl SystemSpecBuilder {
+    pub fn backend(mut self, backend: MemoryBackend) -> Self {
+        self.spec.backend = backend;
+        self
+    }
+
+    pub fn read_only_l1(mut self, read_only: bool) -> Self {
+        self.spec.l1_read_only = read_only;
+        self
+    }
+
+    pub fn core(mut self, core: CoreParams) -> Self {
+        self.spec.core = core;
+        self
+    }
+
+    /// Append a private cache level (innermost first).
+    pub fn private_cache(
+        mut self,
+        size_bytes: usize,
+        ways: usize,
+        latency_cycles: u64,
+        epj_hit: f64,
+        epj_miss: f64,
+    ) -> Self {
+        self.spec.caches.push(CacheLevelSpec {
+            size_bytes,
+            ways,
+            line_bytes: LINE,
+            latency_cycles,
+            epj_hit,
+            epj_miss,
+            shared: false,
+            banks: 16,
+            scale_with_cores: false,
+        });
+        self
+    }
+
+    /// Append the shared LLC level (must come last).
+    pub fn shared_cache(
+        mut self,
+        size_bytes: usize,
+        ways: usize,
+        latency_cycles: u64,
+        epj_hit: f64,
+        epj_miss: f64,
+        banks: usize,
+    ) -> Self {
+        self.spec.caches.push(CacheLevelSpec {
+            size_bytes,
+            ways,
+            line_bytes: LINE,
+            latency_cycles,
+            epj_hit,
+            epj_miss,
+            shared: true,
+            banks,
+            scale_with_cores: false,
+        });
+        self
+    }
+
+    pub fn prefetcher(mut self, streams: usize, degree: usize) -> Self {
+        self.spec.prefetcher = Some(PrefetcherSpec { streams, degree });
+        self
+    }
+
+    pub fn dram(mut self, dram: DramConfig) -> Self {
+        self.spec.dram = dram;
+        self
+    }
+
+    pub fn noc(mut self, noc: NocConfig) -> Self {
+        self.spec.noc = noc;
+        self
+    }
+
+    /// Validate and return the finished spec.
+    pub fn build(self) -> Result<SystemSpec, SpecError> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+fn as_obj<'a>(
+    j: &'a Json,
+    what: &str,
+) -> Result<&'a std::collections::BTreeMap<String, Json>, SpecError> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => Err(SpecError::BadValue(format!("{what} must be a JSON object"))),
+    }
+}
+
+fn check_fields(
+    obj: &std::collections::BTreeMap<String, Json>,
+    prefix: &str,
+    allowed: &[&str],
+) -> Result<(), SpecError> {
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(SpecError::UnknownField(format!("{prefix}{key}")));
+        }
+    }
+    Ok(())
+}
+
+fn get_num(j: &Json, section: &str, key: &str) -> Result<Option<f64>, SpecError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| {
+                SpecError::BadValue(format!("{section}.{key} must be a number"))
+            })?;
+            if !x.is_finite() {
+                return Err(SpecError::BadValue(format!(
+                    "{section}.{key} must be finite"
+                )));
+            }
+            Ok(Some(x))
+        }
+    }
+}
+
+fn opt_f64(j: &Json, section: &str, key: &str) -> Result<Option<f64>, SpecError> {
+    get_num(j, section, key)
+}
+
+fn opt_int(j: &Json, section: &str, key: &str) -> Result<Option<u64>, SpecError> {
+    match get_num(j, section, key)? {
+        None => Ok(None),
+        Some(x) => {
+            if x < 0.0 || x.fract() != 0.0 || x >= 9e15 {
+                return Err(SpecError::BadValue(format!(
+                    "{section}.{key} must be a non-negative integer, got {x}"
+                )));
+            }
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+fn opt_u64(j: &Json, section: &str, key: &str) -> Result<Option<u64>, SpecError> {
+    opt_int(j, section, key)
+}
+
+fn opt_usize(j: &Json, section: &str, key: &str) -> Result<Option<usize>, SpecError> {
+    Ok(opt_int(j, section, key)?.map(|x| x as usize))
+}
+
+fn opt_bool(j: &Json, section: &str, key: &str) -> Result<Option<bool>, SpecError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| SpecError::BadValue(format!("{section}{}{key} must be a boolean",
+                if section.is_empty() { "" } else { "." }))),
+    }
+}
+
+fn req_of<T>(
+    section: &str,
+    key: &str,
+    v: Option<T>,
+) -> Result<T, SpecError> {
+    v.ok_or_else(|| SpecError::MissingField(format!("{section}.{key}")))
+}
+
+fn req_usize(j: &Json, section: &str, key: &str) -> Result<usize, SpecError> {
+    req_of(section, key, opt_usize(j, section, key)?)
+}
+
+fn req_u64(j: &Json, section: &str, key: &str) -> Result<u64, SpecError> {
+    req_of(section, key, opt_u64(j, section, key)?)
+}
+
+fn req_f64(j: &Json, section: &str, key: &str) -> Result<f64, SpecError> {
+    req_of(section, key, opt_f64(j, section, key)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_lower_to_table1() {
+        for spec in SystemSpec::presets() {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+        let h = SystemSpec::host().build(4, CoreModel::OutOfOrder);
+        assert_eq!(h.label, "host");
+        assert_eq!(h.backend, MemoryBackend::HmcLink);
+        assert!(!h.l1_read_only && !h.prefetch);
+        assert_eq!(h.l1.sets(), 64);
+        assert_eq!(h.l2.unwrap().sets(), 512);
+        assert_eq!(h.l3.unwrap().sets(), 8192);
+        assert_eq!(h.l3_banks, 16);
+
+        let pf = SystemSpec::host_prefetch().build(4, CoreModel::OutOfOrder);
+        assert!(pf.prefetch && pf.pf_streams == 16 && pf.pf_degree == 2);
+
+        let n = SystemSpec::ndp().build(16, CoreModel::InOrder);
+        assert_eq!(n.backend, MemoryBackend::DirectVault);
+        assert!(n.l1_read_only && n.l2.is_none() && n.l3.is_none());
+
+        let nuca = SystemSpec::host_nuca().build(256, CoreModel::OutOfOrder);
+        assert_eq!(nuca.l3.unwrap().size_bytes, 512 << 20);
+        assert_eq!(nuca.l3_banks, 256);
+        assert_eq!(nuca.backend, MemoryBackend::NucaMesh);
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity_for_presets() {
+        for spec in SystemSpec::presets() {
+            let back = SystemSpec::from_json(&spec.to_json())
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert_eq!(back, spec, "{} drifted through JSON", spec.name);
+            assert_eq!(back.fingerprint(), spec.fingerprint());
+        }
+    }
+
+    #[test]
+    fn sparse_json_fills_table1_defaults() {
+        let text = r#"{
+            "name": "mini",
+            "caches": [
+                {"size_bytes": 16384, "ways": 4, "latency_cycles": 3,
+                 "epj_hit": 10.0, "epj_miss": 20.0}
+            ]
+        }"#;
+        let spec = SystemSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.backend, MemoryBackend::HmcLink);
+        assert_eq!(spec.core, CoreParams::default());
+        assert_eq!(spec.caches[0].line_bytes, LINE);
+        assert_eq!(spec.dram, DramConfig::default());
+        // Sparse and explicit spellings of the same system fingerprint
+        // identically (the canonical form is hashed, not the source).
+        let respelled = SystemSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec.fingerprint(), respelled.fingerprint());
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_everywhere() {
+        let top = r#"{"name":"x","caches":[],"sizebytes":1}"#;
+        assert!(matches!(
+            SystemSpec::from_json_str(top),
+            Err(SpecError::UnknownField(f)) if f == "sizebytes"
+        ));
+        let nested = r#"{
+            "name": "x",
+            "caches": [{"size_bytes": 16384, "ways": 4, "latency_cycles": 3,
+                        "epj_hit": 1.0, "epj_miss": 2.0, "wayz": 8}]
+        }"#;
+        assert!(matches!(
+            SystemSpec::from_json_str(nested),
+            Err(SpecError::UnknownField(f)) if f == "caches[0].wayz"
+        ));
+    }
+
+    #[test]
+    fn structural_rules_are_enforced() {
+        assert!(matches!(
+            SystemSpec::from_json_str(r#"{"name":"x","caches":[]}"#),
+            Err(SpecError::EmptyHierarchy)
+        ));
+        // Non-power-of-two set count.
+        let bad_geom = r#"{
+            "name": "x",
+            "caches": [{"size_bytes": 24576, "ways": 4, "latency_cycles": 3,
+                        "epj_hit": 1.0, "epj_miss": 2.0}]
+        }"#;
+        assert!(matches!(
+            SystemSpec::from_json_str(bad_geom),
+            Err(SpecError::Geometry(_))
+        ));
+        // Degenerate geometry that used to divide sets to 0 and panic
+        // later in Cache::new now fails validation up front.
+        let zero_sets = CacheLevelSpec {
+            size_bytes: 32,
+            ways: 8,
+            ..l1_level()
+        };
+        assert!(matches!(
+            validate_geometry(0, &zero_sets),
+            Err(SpecError::Geometry(_))
+        ));
+        // Shared level must be last.
+        let mut s = SystemSpec::host();
+        s.caches.swap(1, 2);
+        assert!(matches!(s.validate(), Err(SpecError::Hierarchy(_))));
+        // Prefetcher needs a private L2.
+        let mut p = SystemSpec::ndp();
+        p.prefetcher = Some(PrefetcherSpec { streams: 16, degree: 2 });
+        assert!(matches!(p.validate(), Err(SpecError::Hierarchy(_))));
+        // Missing required field.
+        assert!(matches!(
+            SystemSpec::from_json_str(r#"{"caches":[]}"#),
+            Err(SpecError::MissingField(f)) if f == "name"
+        ));
+    }
+
+    #[test]
+    fn builder_composes_valid_specs() {
+        let spec = SystemSpec::builder("ndp-l1-64k")
+            .backend(MemoryBackend::DirectVault)
+            .read_only_l1(true)
+            .private_cache(64 << 10, 8, 4, 15.0, 33.0)
+            .build()
+            .unwrap();
+        assert_eq!(spec.name, "ndp-l1-64k");
+        let cfg = spec.build(16, CoreModel::OutOfOrder);
+        assert_eq!(cfg.l1.size_bytes, 64 << 10);
+        assert!(cfg.l1_read_only && cfg.l2.is_none());
+
+        // Builder surfaces validation errors instead of panicking later.
+        let bad = SystemSpec::builder("bad").build();
+        assert!(matches!(bad, Err(SpecError::EmptyHierarchy)));
+    }
+
+    #[test]
+    fn distinct_specs_never_share_a_fingerprint() {
+        let mut names = std::collections::BTreeSet::new();
+        for s in SystemSpec::presets() {
+            assert!(names.insert(s.fingerprint()), "{} collided", s.name);
+        }
+        let mut tweaked = SystemSpec::host();
+        tweaked.caches[0].size_bytes = 64 << 10;
+        assert!(names.insert(tweaked.fingerprint()), "tweaked spec collided");
+    }
+}

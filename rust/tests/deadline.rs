@@ -180,7 +180,7 @@ fn hang_injected_sweep_times_out_and_resume_converges() {
     };
 
     // --- 1. Clean baseline. -------------------------------------------
-    let clean = Coordinator::new(&dir, 4).profiles("dl-clean", &specs, opt, true);
+    let clean = Coordinator::new(&dir, 4).profiles("dl-clean", &specs, opt.clone(), true);
     assert_eq!(clean.len(), 4);
 
     // --- 2. Sweep under an injected hang + --job-timeout. -------------
@@ -202,7 +202,7 @@ fn hang_injected_sweep_times_out_and_resume_converges() {
     let partial = Coordinator::new(&dir, 4)
         .with_recovery(2, false)
         .with_deadlines(Some(Duration::from_secs(2)), None)
-        .profiles("dl", &specs, opt, true);
+        .profiles("dl", &specs, opt.clone(), true);
     fault::set_override(None);
 
     assert_eq!(

@@ -76,7 +76,7 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
 
     // --- 3. Clean baseline sweep. --------------------------------------
     fault::set_override(None);
-    let clean = Coordinator::new(&dir, 4).profiles("clean", &specs, opt, true);
+    let clean = Coordinator::new(&dir, 4).profiles("clean", &specs, opt.clone(), true);
     assert_eq!(clean.len(), 4);
 
     // --- 4. Sweep under ~10% faults converges byte-identically. --------
@@ -90,7 +90,7 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
     }));
     let faulty = Coordinator::new(&dir, 4)
         .with_recovery(8, false)
-        .profiles("fi", &specs, opt, true);
+        .profiles("fi", &specs, opt.clone(), true);
     fault::set_override(None);
     assert_eq!(
         faulty.len(),
@@ -116,7 +116,7 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
     let calls_before = profile_call_count();
     let resumed = Coordinator::new(&dir, 2)
         .with_recovery(0, true)
-        .profiles("res", &specs, opt, false);
+        .profiles("res", &specs, opt.clone(), false);
     assert_eq!(
         profile_call_count() - calls_before,
         2,
@@ -138,7 +138,7 @@ fn faulty_sweep_converges_and_resume_recomputes_only_unfinished() {
     // no faults, no worker pool.
     let serial_ref: Vec<FunctionProfile> = specs
         .iter()
-        .map(|s| profile_function_tuned(s, opt, ReplayParallelism::Serial))
+        .map(|s| profile_function_tuned(s, opt.clone(), ReplayParallelism::Serial))
         .collect();
     assert_eq!(
         serialize(&clean),

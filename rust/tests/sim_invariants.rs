@@ -2,7 +2,7 @@
 //! randomized workloads/configurations must never violate the physical
 //! and accounting laws the methodology depends on.
 
-use damov::sim::{simulate, Access, CoreModel, SystemConfig, SystemKind};
+use damov::sim::{simulate, Access, CoreModel, SystemConfig};
 use damov::util::prop;
 use damov::util::rng::Xoshiro256;
 
@@ -73,7 +73,7 @@ fn accounting_laws_hold_for_random_workloads() {
         }
         // Cache conservation: hits + misses == demand accesses at L1.
         let accesses: u64 = trace.iter().map(|t| t.len() as u64).sum();
-        let ndp_stores = if cfg.kind == SystemKind::Ndp {
+        let ndp_stores = if cfg.l1_read_only {
             trace.iter().flatten().filter(|a| a.write).count() as u64
         } else {
             0
@@ -84,7 +84,7 @@ fn accounting_laws_hold_for_random_workloads() {
         for v in [e.l1, e.l2, e.l3, e.dram, e.link, e.noc] {
             assert!(v >= 0.0);
         }
-        if cfg.kind == SystemKind::Ndp {
+        if cfg.is_direct_vault() {
             assert_eq!(e.l2 + e.l3 + e.link, 0.0);
         }
         // Bandwidth never exceeds the configured peak.

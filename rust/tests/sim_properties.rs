@@ -140,7 +140,8 @@ fn replay_profile_bytes_invariant_under_lane_schedule() {
             ..Default::default()
         };
         let bytes = |par| {
-            store::profile_to_json(&profile_function_tuned(&spec, opt, par)).to_string_compact()
+            store::profile_to_json(&profile_function_tuned(&spec, opt.clone(), par))
+                .to_string_compact()
         };
         let reference = bytes(ReplayParallelism::Serial);
         let extra = rng.gen_usize(1, 9);

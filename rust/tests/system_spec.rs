@@ -1,0 +1,309 @@
+//! Integration tests for the data-driven system-description layer:
+//! JSON round-trips, strict rejection of malformed specs, fingerprint
+//! canonicalization/discrimination, a custom 2-level spec swept
+//! end-to-end through the coordinator cache, and the CLI's non-zero
+//! exit codes on unknown commands, options, and report names.
+
+use std::process::Command;
+
+use damov::coordinator::{store, sweep_fingerprint, Coordinator};
+use damov::methodology::step3::{profile_call_count, SweepOptions};
+use damov::sim::{MemoryBackend, SpecError, SystemSpec};
+use damov::util::prop;
+use damov::util::rng::Xoshiro256;
+use damov::workloads::{registry, Scale};
+
+fn fixture_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/custom_2level.json")
+}
+
+// --- Round-trips ------------------------------------------------------
+
+#[test]
+fn preset_specs_roundtrip_through_json() {
+    for spec in SystemSpec::presets() {
+        let pretty = spec.to_json().to_string_pretty();
+        let back = SystemSpec::from_json_str(&pretty)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        assert_eq!(back, spec, "{} must round-trip", spec.name);
+        assert_eq!(back.fingerprint(), spec.fingerprint());
+        // Serialization is deterministic: serialize twice, same bytes.
+        assert_eq!(spec.to_json().to_string_compact(), back.to_json().to_string_compact());
+    }
+}
+
+/// Random well-formed spec via the builder (all-power-of-two geometry,
+/// prefetcher only with a private L2, NUCA only with a shared level).
+fn random_spec(rng: &mut Xoshiro256, tag: u64) -> SystemSpec {
+    let mut b = SystemSpec::builder(&format!("rand-{tag}"))
+        .private_cache(1 << rng.gen_usize(13, 18), 1 << rng.gen_usize(0, 4), 4, 15.0, 33.0);
+    let has_l2 = rng.gen_bool(0.6);
+    if has_l2 {
+        b = b.private_cache(256 << 10, 8, 7, 46.0, 93.0);
+    }
+    let has_llc = rng.gen_bool(0.6);
+    if has_llc {
+        let banks = 1 << rng.gen_usize(2, 6);
+        b = b.shared_cache(1 << rng.gen_usize(20, 24), 16, 27, 945.0, 1904.0, banks);
+    }
+    if has_l2 && rng.gen_bool(0.4) {
+        b = b.prefetcher(rng.gen_usize(1, 32), rng.gen_usize(1, 8));
+    }
+    b = if has_llc && rng.gen_bool(0.3) {
+        b.backend(MemoryBackend::NucaMesh)
+    } else if rng.gen_bool(0.3) {
+        b.backend(MemoryBackend::DirectVault)
+    } else {
+        b.backend(MemoryBackend::HmcLink)
+    };
+    b.read_only_l1(rng.gen_bool(0.3)).build().expect("random builder spec must validate")
+}
+
+#[test]
+fn random_builder_specs_roundtrip_through_json() {
+    prop::check(60, |rng| {
+        let tag = rng.gen_range(1 << 32);
+        let spec = random_spec(rng, tag);
+        let back = SystemSpec::from_json_str(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.fingerprint(), spec.fingerprint());
+    });
+}
+
+// --- Rejection of malformed specs ------------------------------------
+
+/// Minimal valid spec text the rejection cases mutate from.
+const MINIMAL: &str = r#"{
+  "name": "tiny",
+  "caches": [
+    {"size_bytes": 16384, "ways": 4, "latency_cycles": 3, "epj_hit": 12.0, "epj_miss": 28.0}
+  ]
+}"#;
+
+#[test]
+fn malformed_specs_are_rejected_with_structured_errors() {
+    // The baseline parses — every case below is one deliberate break.
+    SystemSpec::from_json_str(MINIMAL).expect("minimal spec must be valid");
+
+    let err = |text: &str| SystemSpec::from_json_str(text).unwrap_err();
+
+    assert!(matches!(err("not json {{{"), SpecError::Parse(_)));
+    assert!(matches!(
+        err(r#"{"name":"x","caches":[],"frobnicate":1}"#),
+        SpecError::UnknownField(_)
+    ));
+    assert!(matches!(
+        err(&MINIMAL.replace("\"size_bytes\"", "\"size_byts\"")),
+        SpecError::UnknownField(_) | SpecError::MissingField(_)
+    ));
+    let nameless = MINIMAL.replace("  \"name\": \"tiny\",\n", "");
+    assert!(matches!(err(&nameless), SpecError::MissingField(_)));
+    assert!(matches!(err(r#"{"name":"x"}"#), SpecError::MissingField(_)));
+    assert!(matches!(err(r#"{"name":"x","caches":[]}"#), SpecError::EmptyHierarchy));
+    assert!(matches!(
+        err(&MINIMAL.replace("\"tiny\"", "\"bad name!\"")),
+        SpecError::BadName(_)
+    ));
+    assert!(matches!(
+        err(&MINIMAL.replace("{\n  \"name\"", "{\n  \"backend\": \"warp-drive\",\n  \"name\"")),
+        SpecError::BadValue(_)
+    ));
+    // Prefetcher with no private L2 to sit at.
+    let pf = "{\n  \"prefetcher\": {\"streams\": 4, \"degree\": 2},\n  \"name\"";
+    assert!(matches!(
+        err(&MINIMAL.replace("{\n  \"name\"", pf)),
+        SpecError::Hierarchy(_)
+    ));
+    // NUCA backend with no shared level.
+    assert!(matches!(
+        err(&MINIMAL.replace("{\n  \"name\"", "{\n  \"backend\": \"nuca-mesh\",\n  \"name\"")),
+        SpecError::Hierarchy(_)
+    ));
+}
+
+#[test]
+fn degenerate_geometry_is_rejected_at_construction() {
+    // sets = 4096 / 64 / 128 would divide to 0 — the class of geometry
+    // that used to panic deep inside Cache::new at simulation time.
+    let e = SystemSpec::builder("degenerate")
+        .private_cache(4096, 128, 4, 1.0, 1.0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SpecError::Geometry(_)), "got {e}");
+
+    // Non-power-of-two set count (24576 / 64 / 4 = 96 sets).
+    let e = SystemSpec::builder("np2")
+        .private_cache(24576, 4, 4, 1.0, 1.0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SpecError::Geometry(_)), "got {e}");
+
+    // Size not divisible by line*ways.
+    let e = SystemSpec::builder("ragged")
+        .private_cache(1000, 4, 4, 1.0, 1.0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SpecError::Geometry(_)), "got {e}");
+}
+
+// --- Fingerprints ------------------------------------------------------
+
+#[test]
+fn fingerprints_discriminate_and_canonicalize() {
+    // Distinct specs — including near-identical ones — never collide.
+    let mut variant = SystemSpec::host();
+    variant.name = "host2".to_string();
+    let mut bigger_l1 = SystemSpec::host();
+    bigger_l1.caches[0].size_bytes *= 2;
+    let all = [
+        SystemSpec::host(),
+        SystemSpec::host_prefetch(),
+        SystemSpec::ndp(),
+        SystemSpec::host_nuca(),
+        SystemSpec::load(fixture_path().as_ref()).unwrap(),
+        variant,
+        bigger_l1,
+    ];
+    for (i, a) in all.iter().enumerate() {
+        for b in &all[i + 1..] {
+            assert_ne!(a.fingerprint(), b.fingerprint(), "{} vs {}", a.name, b.name);
+        }
+    }
+
+    // A respelled-but-identical spec (defaults omitted, keys reordered,
+    // different whitespace) canonicalizes to the same fingerprint...
+    let respelled = r#"{
+        "caches": [
+            {"ways": 8, "size_bytes": 32768, "latency_cycles": 4, "epj_hit": 15.0, "epj_miss": 33.0},
+            {"epj_miss": 93.0, "epj_hit": 46.0, "size_bytes": 262144, "ways": 8, "latency_cycles": 7},
+            {"size_bytes": 8388608, "ways": 16, "latency_cycles": 27, "epj_hit": 945.0, "epj_miss": 1904.0, "shared": true}
+        ],
+        "name": "host"
+    }"#;
+    let re = SystemSpec::from_json_str(respelled).unwrap();
+    assert_eq!(re, SystemSpec::host());
+    assert_eq!(re.fingerprint(), SystemSpec::host().fingerprint());
+
+    // ...so the sweep cache key is identical (a cache hit), while any
+    // semantically different system set changes the key.
+    let specs: Vec<_> = registry::representatives().into_iter().take(2).collect();
+    let opt_canonical = SweepOptions {
+        systems: vec![SystemSpec::host()],
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+    let opt_respelled = SweepOptions {
+        systems: vec![re],
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+    let opt_different = SweepOptions {
+        systems: vec![all[6].clone()],
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+    assert_eq!(
+        sweep_fingerprint(&specs, &opt_canonical),
+        sweep_fingerprint(&specs, &opt_respelled)
+    );
+    assert_ne!(
+        sweep_fingerprint(&specs, &opt_canonical),
+        sweep_fingerprint(&specs, &opt_different)
+    );
+}
+
+// --- End-to-end: custom spec through the coordinator -------------------
+
+#[test]
+fn custom_2level_spec_sweeps_end_to_end_and_caches() {
+    let dir = std::env::temp_dir().join(format!("damov-spec-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let custom = SystemSpec::load(fixture_path().as_ref()).unwrap();
+    assert_eq!(custom.name, "edge-2level");
+    assert_eq!(custom.caches.len(), 2);
+
+    let specs: Vec<_> = registry::representatives().into_iter().take(2).collect();
+    let opt = SweepOptions {
+        systems: vec![custom.clone()],
+        scale: Scale(0.05),
+        ..Default::default()
+    };
+    let profiles = Coordinator::new(&dir, 2).profiles("spec-e2e", &specs, opt.clone(), true);
+    assert_eq!(profiles.len(), 2);
+    for p in &profiles {
+        assert_eq!(p.baseline_system(), "edge-2level");
+        assert!(!p.runs.is_empty());
+        assert!(p.runs.iter().all(|r| r.system == "edge-2level"));
+        assert!(p.lfmr_by_cores.iter().all(|v| (0.0..=1.0 + 1e-9).contains(v)));
+    }
+    let bytes: Vec<String> = profiles
+        .iter()
+        .map(|p| store::profile_to_json(p).to_string_compact())
+        .collect();
+
+    // A respelled-identical spec must hit the same cache: zero profile
+    // recomputation, byte-identical result set.
+    let respelled = SystemSpec::from_json_str(&custom.to_json().to_string_pretty()).unwrap();
+    let opt2 = SweepOptions {
+        systems: vec![respelled],
+        ..opt
+    };
+    let calls_before = profile_call_count();
+    let cached = Coordinator::new(&dir, 2).profiles("spec-e2e", &specs, opt2, false);
+    assert_eq!(profile_call_count(), calls_before, "cache hit must not recompute");
+    let cached_bytes: Vec<String> = cached
+        .iter()
+        .map(|p| store::profile_to_json(p).to_string_compact())
+        .collect();
+    assert_eq!(bytes, cached_bytes);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --- CLI exit codes (satellite bugfix) ---------------------------------
+
+fn damov(cli: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_damov"))
+        .args(cli)
+        .output()
+        .expect("spawn damov binary")
+}
+
+#[test]
+fn cli_unknown_paths_exit_nonzero_with_hints() {
+    let out = damov(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+
+    let out = damov(&["report", "nosuchreport"]);
+    assert_eq!(out.status.code(), Some(2), "unknown report must not exit 0");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown report"), "stderr: {err}");
+    assert!(err.contains("known reports:"), "stderr must hint at valid names");
+
+    let out = damov(&["report", "all", "--frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown option"));
+
+    let out = damov(&["list", "--threads", "4"]);
+    assert_eq!(out.status.code(), Some(2), "options foreign to the command are errors");
+
+    let out = damov(&["systems", "nosuch"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn cli_systems_subcommand_lists_and_dumps() {
+    let out = damov(&["systems"]);
+    assert_eq!(out.status.code(), Some(0));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for preset in ["host", "host+pf", "ndp", "host-nuca"] {
+        assert!(text.contains(preset), "preset {preset} missing from listing");
+    }
+
+    let out = damov(&["systems", "ndp"]);
+    assert_eq!(out.status.code(), Some(0));
+    let dumped = String::from_utf8_lossy(&out.stdout);
+    let spec = SystemSpec::from_json_str(&dumped).expect("dump must parse back");
+    assert_eq!(spec, SystemSpec::ndp(), "dump must be the preset itself");
+}
